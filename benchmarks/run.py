@@ -1,0 +1,392 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = ';'-separated
+key=value pairs).  Everything is laptop-scaled but structurally faithful
+to the paper's experiments; the full-size parameters live in
+``repro.configs.paper_workloads`` and run unchanged on a pod.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.algorithms import (MSParams, RMATParams, UTSParams,
+                              betweenness_centrality, bc_single_node,
+                              mariani_silver, naive_render, rmat_graph,
+                              uts_parallel, uts_sequential)
+from repro.core import (ElasticExecutor, HybridExecutor, LocalExecutor,
+                        StagedController, TaskShape, VMPrice,
+                        characterize, emr_cluster_cost,
+                        price_performance, serverless_cost, vm_cost)
+from repro.core.adaptive import Stage as CtrlStage
+from repro.configs.paper_workloads import (BC_SCALED, BC_SCALED_TASKS,
+                                           MS_SCALED, UTS_SCALED)
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, **derived) -> None:
+    kv = ";".join(f"{k}={v}" for k, v in derived.items())
+    row = f"{name},{us_per_call:.1f},{kv}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+# -- Table 1: UTS tree sizes ---------------------------------------------------
+
+def table1_uts_tree_sizes() -> None:
+    """Tree size vs depth (seed 19, b0=4): exponential growth law."""
+    sizes = {}
+    t0 = time.monotonic()
+    for d in range(4, 11):
+        sizes[d] = uts_sequential(UTSParams(seed=19, b0=4.0, max_depth=d,
+                                            chunk=4096))
+    wall = time.monotonic() - t0
+    growth = [sizes[d + 1] / sizes[d] for d in range(4, 10)]
+    emit("table1_uts_tree_sizes", wall / 7 * 1e6,
+         **{f"d{d}": n for d, n in sizes.items()},
+         mean_growth=round(float(np.mean(growth)), 2))
+
+
+# -- Table 2: algorithm characterization ----------------------------------------
+
+def table2_characterization() -> None:
+    """C_L per algorithm (paper: UTS 1.20, MS 4.06, BC 0.23).
+
+    Each workload runs twice with a fresh executor: the first pass warms
+    jit caches (compile time would otherwise swamp the duration CDF —
+    the single-core stand-in for warm FaaS containers, §5)."""
+    t0 = time.monotonic()
+    cvs = {}
+
+    def measured(fn):
+        fn(LocalExecutor(1, invoke_overhead=0.0))       # warm
+        ex = LocalExecutor(1, invoke_overhead=0.0)
+        fn(ex)
+        ex.shutdown()
+        return characterize(ex.stats.records).cv
+
+    cvs["uts"] = measured(lambda ex: uts_parallel(
+        ex, UTSParams(seed=19, b0=4.0, max_depth=9, chunk=128),
+        shape=TaskShape(6, 300)))
+    cvs["ms"] = measured(lambda ex: mariani_silver(ex, MS_SCALED))
+    cvs["bc"] = measured(lambda ex: betweenness_centrality(
+        ex, BC_SCALED, n_tasks=BC_SCALED_TASKS))
+    wall = time.monotonic() - t0
+    emit("table2_characterization", wall * 1e6,
+         cv_uts=round(cvs["uts"], 3), cv_ms=round(cvs["ms"], 3),
+         cv_bc=round(cvs["bc"], 3),
+         paper_cv_uts=1.20, paper_cv_ms=4.06, paper_cv_bc=0.23,
+         paper_ordering_ms_gt_uts_gt_bc=(cvs["ms"] > cvs["uts"]
+                                         > cvs["bc"]))
+
+
+# -- Table 4: invocation overheads -----------------------------------------------
+
+def table4_invocation_overheads() -> None:
+    """Avg overhead: elastic (FaaS-modelled) vs local thread."""
+    n = 200
+    with ElasticExecutor(max_concurrency=1, invoke_overhead=13e-3,
+                         invoke_rate_limit=None) as ex:
+        ex.submit(lambda: None).result()  # warm
+        t0 = time.monotonic()
+        for _ in range(20):
+            ex.submit(lambda: None).result()
+        remote_us = (time.monotonic() - t0) / 20 * 1e6
+    with LocalExecutor(1, invoke_overhead=18e-6) as ex:
+        ex.submit(lambda: None).result()
+        t0 = time.monotonic()
+        for _ in range(n):
+            ex.submit(lambda: None).result()
+        local_us = (time.monotonic() - t0) / n * 1e6
+    emit("table4_invocation_overheads", remote_us,
+         remote_us=round(remote_us, 1), local_us=round(local_us, 1),
+         ratio=round(remote_us / max(local_us, 1e-9), 1),
+         paper_remote_ms=13, paper_local_us=18)
+
+
+# -- Table 5: UTS performance / parallel efficiency ------------------------------
+
+def table5_uts_performance() -> None:
+    p = UTSParams(seed=19, b0=4.0, max_depth=9, chunk=2048)
+    t0 = time.monotonic()
+    total = uts_sequential(p)
+    t_seq = time.monotonic() - t0
+    results = {"sequential": (t_seq, 1)}
+    for name, width in (("pool4", 4), ("pool8", 8)):
+        with ElasticExecutor(max_concurrency=width,
+                             invoke_overhead=0.0005,
+                             invoke_rate_limit=None) as ex:
+            t0 = time.monotonic()
+            r = uts_parallel(ex, p, shape=TaskShape(8, 4000))
+            results[name] = (time.monotonic() - t0, width)
+            assert r.count == total
+    seq_tput = total / results["sequential"][0]
+    derived = {"nodes": total,
+               "seq_Mnodes_s": round(seq_tput / 1e6, 2)}
+    for name, (t, w) in results.items():
+        if name == "sequential":
+            continue
+        tput = total / t
+        derived[f"{name}_Mnodes_s"] = round(tput / 1e6, 2)
+        derived[f"{name}_parallel_eff"] = round(tput / (seq_tput * w), 3)
+    emit("table5_uts_performance", results["pool8"][0] * 1e6, **derived)
+
+
+# -- Fig 4: dynamic parameter optimization ---------------------------------------
+
+def _scaled_controller() -> StagedController:
+    # Listing 5 thresholds rescaled to a 16-worker pool
+    return StagedController(
+        initial=TaskShape(32, 500),
+        stages=[
+            CtrlStage(8, "above", TaskShape(8, 4000)),
+            CtrlStage(13, "above", TaskShape(2, 8000)),
+            CtrlStage(11, "below", TaskShape(2, 4000)),
+            CtrlStage(2, "below", TaskShape(2, 1500)),
+        ])
+
+
+def fig4_dynamic_optimization() -> None:
+    p = UTSParams(seed=19, b0=4.0, max_depth=10, chunk=2048)
+
+    def run_static():
+        with ElasticExecutor(max_concurrency=16, invoke_overhead=0.001,
+                             invoke_rate_limit=None) as ex:
+            t0 = time.monotonic()
+            r = uts_parallel(ex, p, shape=TaskShape(4, 1000))
+            return time.monotonic() - t0, r
+
+    def run_dyn():
+        with ElasticExecutor(max_concurrency=16, invoke_overhead=0.001,
+                             invoke_rate_limit=None) as ex:
+            t0 = time.monotonic()
+            r = uts_parallel(ex, p, shape=TaskShape(32, 500),
+                             controller=_scaled_controller())
+            return time.monotonic() - t0, r
+
+    run_static()  # warm jit caches
+    statics = [run_static() for _ in range(3)]
+    dyns = [run_dyn() for _ in range(3)]
+    t_static = sorted(t for t, _ in statics)[1]      # median of 3
+    t_dyn = sorted(t for t, _ in dyns)[1]
+    r_static, r_dyn = statics[0][1], dyns[0][1]
+    assert r_static.count == r_dyn.count
+    emit("fig4_dynamic_optimization", t_dyn * 1e6,
+         t_static_s=round(t_static, 3), t_dynamic_s=round(t_dyn, 3),
+         improvement_pct=round(100 * (1 - t_dyn / t_static), 1),
+         peak_concurrency=r_dyn.peak_concurrency,
+         paper_improvement_pct=41.56)
+
+
+def fig4_dynamic_optimization_sim() -> None:
+    """Fig 4 at the paper's true scale (2000 workers, 13 ms invoke)
+    under the virtual-time pool simulator — one core cannot exhibit
+    concurrency effects, so the scheduling policy is isolated instead
+    (core.simpool; the tree is actually traversed, time is simulated)."""
+    from repro.core.simpool import simulate_uts_pool
+    p = UTSParams(seed=19, b0=4.0, max_depth=11, chunk=4096)
+    alpha = 10e-6  # s/node: a ~2500-node task ~ 38ms incl. overhead
+    # static baseline = the best static (split, iters) from a grid sweep
+    # (the paper tunes both versions for best performance)
+    static = simulate_uts_pool(p, workers=2000, overhead_s=13e-3,
+                               alpha_s_per_node=alpha,
+                               shape=TaskShape(50, 5_000))
+    ctrl = StagedController(initial=TaskShape(200, 2_000), stages=[
+        CtrlStage(800, "above", TaskShape(50, 10_000)),
+        CtrlStage(1300, "above", TaskShape(5, 25_000)),
+        CtrlStage(1100, "below", TaskShape(5, 10_000)),
+        CtrlStage(100, "below", TaskShape(5, 4_000)),
+    ])
+    dyn = simulate_uts_pool(p, workers=2000, overhead_s=13e-3,
+                            alpha_s_per_node=alpha,
+                            shape=TaskShape(200, 2_000),
+                            controller=ctrl)
+    assert static.count == dyn.count
+    emit("fig4_dynamic_optimization_sim", dyn.virtual_time_s * 1e6,
+         nodes=static.count,
+         vtime_static_s=round(static.virtual_time_s, 3),
+         vtime_dynamic_s=round(dyn.virtual_time_s, 3),
+         improvement_pct=round(
+             100 * (1 - dyn.virtual_time_s / static.virtual_time_s), 1),
+         peak_static=static.peak_concurrency,
+         peak_dynamic=dyn.peak_concurrency,
+         paper_improvement_pct=41.56)
+
+
+# -- Fig 5 / Table 6: Mariani-Silver executors + cost ----------------------------
+
+def fig5_table6_mariani_silver() -> None:
+    p = MS_SCALED
+    runs = {}
+    with LocalExecutor(2, invoke_overhead=0.0) as ex:   # "parallel VM"
+        t0 = time.monotonic()
+        mariani_silver(ex, p)
+        runs["parallel"] = (time.monotonic() - t0, None)
+    with ElasticExecutor(max_concurrency=16, invoke_overhead=0.002,
+                         invoke_rate_limit=None) as ex:
+        t0 = time.monotonic()
+        mariani_silver(ex, p)
+        runs["serverless"] = (time.monotonic() - t0, ex.stats.records)
+    with HybridExecutor(local_concurrency=2,
+                        elastic_concurrency=16) as hy:
+        t0 = time.monotonic()
+        mariani_silver(hy, p)
+        runs["hybrid"] = (time.monotonic() - t0, hy.records)
+
+    mp = p.width * p.height / 1e6
+    derived = {}
+    for name, (wall, recs) in runs.items():
+        if recs is None:
+            cost = vm_cost(wall, VMPrice.named("c5.12xlarge"))
+        else:
+            cost = serverless_cost(recs, wall_time_s=wall)
+        derived[f"{name}_s"] = round(wall, 3)
+        derived[f"{name}_usd"] = round(cost.total, 6)
+        derived[f"{name}_MPs_per_usd"] = round(
+            price_performance(mp / wall, cost), 2)
+    emit("fig5_table6_mariani_silver", runs["serverless"][0] * 1e6,
+         **derived)
+
+
+# -- Fig 6: BC scaling ------------------------------------------------------------
+
+def fig6_bc_scaling() -> None:
+    p = BC_SCALED
+    adj = rmat_graph(p)
+    expected = bc_single_node(adj, n_tasks=1)
+    derived = {}
+    wall8 = 0.0
+    for width in (2, 4, 8):
+        with ElasticExecutor(max_concurrency=width,
+                             invoke_overhead=0.001,
+                             invoke_rate_limit=None) as ex:
+            t0 = time.monotonic()
+            res = betweenness_centrality(ex, p, n_tasks=BC_SCALED_TASKS,
+                                         regenerate_graph=True)
+            wall = time.monotonic() - t0
+        assert np.allclose(res.betweenness, expected, rtol=1e-4,
+                           atol=1e-3)
+        derived[f"w{width}_s"] = round(wall, 3)
+        if width == 8:
+            wall8 = wall
+    emit("fig6_bc_scaling", wall8 * 1e6, n_vertices=p.n_vertices,
+         tasks=BC_SCALED_TASKS, **derived)
+
+
+# -- Figs 7-9: cost-performance --------------------------------------------------
+
+def fig7_9_cost_performance() -> None:
+    p = UTS_SCALED
+    # serverless (static)
+    with ElasticExecutor(max_concurrency=16, invoke_overhead=0.001,
+                         invoke_rate_limit=None) as ex:
+        t0 = time.monotonic()
+        r_st = uts_parallel(ex, p, shape=TaskShape(4, 1000))
+        wall_st = time.monotonic() - t0
+        cost_st = serverless_cost(ex.stats.records, wall_time_s=wall_st)
+    # serverless (dynamic, Listing 5 scaled)
+    with ElasticExecutor(max_concurrency=16, invoke_overhead=0.001,
+                         invoke_rate_limit=None) as ex:
+        t0 = time.monotonic()
+        r_dy = uts_parallel(ex, p, shape=TaskShape(32, 500),
+                            controller=_scaled_controller())
+        wall_dy = time.monotonic() - t0
+        cost_dy = serverless_cost(ex.stats.records, wall_time_s=wall_dy)
+    # "VM" (narrow local pool) and EMR-style cluster pricing on its time
+    with LocalExecutor(2, invoke_overhead=0.0) as ex:
+        t0 = time.monotonic()
+        r_vm = uts_parallel(ex, p, shape=TaskShape(4, 4000))
+        wall_vm = time.monotonic() - t0
+    cost_vm = vm_cost(wall_vm, VMPrice.named("c5.24xlarge"))
+    cost_emr = emr_cluster_cost(wall_vm, workers=2)
+
+    assert r_st.count == r_dy.count == r_vm.count
+    nodes = r_st.count
+    emit("fig7_9_cost_performance", wall_dy * 1e6,
+         nodes=nodes,
+         serverless_static_s=round(wall_st, 3),
+         serverless_dynamic_s=round(wall_dy, 3),
+         vm_s=round(wall_vm, 3),
+         dyn_vs_static_time_pct=round(100 * (1 - wall_dy / wall_st), 1),
+         dyn_extra_cost_pct=round(
+             100 * (cost_dy.total / max(cost_st.total, 1e-12) - 1), 2),
+         ppr_static=round(price_performance(nodes / wall_st / 1e6,
+                                            cost_st), 0),
+         ppr_dynamic=round(price_performance(nodes / wall_dy / 1e6,
+                                             cost_dy), 0),
+         ppr_vm=round(price_performance(nodes / wall_vm / 1e6,
+                                        cost_vm), 0),
+         ppr_emr=round(price_performance(nodes / wall_vm / 1e6,
+                                         cost_emr), 0))
+
+
+# -- Roofline table (from the dry-run artifacts) ----------------------------------
+
+def roofline_from_dryrun() -> None:
+    root = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun")
+    if not os.path.isdir(root):
+        emit("roofline_from_dryrun", 0.0, status="no dryrun artifacts")
+        return
+    n = 0
+    for arch in sorted(os.listdir(root)):
+        for shape in sorted(os.listdir(os.path.join(root, arch))):
+            f = os.path.join(root, arch, shape, "pod256.json")
+            if not os.path.exists(f):
+                continue
+            rec = json.load(open(f))
+            if rec.get("status") != "ok":
+                continue
+            a = rec.get("analysis", {})
+            if "compute_s" not in a:
+                continue
+            n += 1
+            emit(f"roofline[{arch}/{shape}]",
+                 a["compute_s"] * 1e6,
+                 compute_s=round(a["compute_s"], 4),
+                 memory_s=round(a["memory_s"], 4),
+                 collective_s=round(a["collective_s"], 4),
+                 dominant=a["dominant"])
+    emit("roofline_from_dryrun", 0.0, cells=n)
+
+
+BENCHES = {
+    "table1": table1_uts_tree_sizes,
+    "table2": table2_characterization,
+    "table4": table4_invocation_overheads,
+    "table5": table5_uts_performance,
+    "fig4": fig4_dynamic_optimization,
+    "fig4_sim": fig4_dynamic_optimization_sim,
+    "fig5_table6": fig5_table6_mariani_silver,
+    "fig6": fig6_bc_scaling,
+    "fig7_9": fig7_9_cost_performance,
+    "roofline": roofline_from_dryrun,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=list(BENCHES))
+    args = ap.parse_args()
+    names = args.only or list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        try:
+            BENCHES[name]()
+        except Exception as e:  # noqa: BLE001 — keep the harness going
+            emit(name, 0.0, status=f"ERROR {type(e).__name__}: {e}")
+    fails = [r for r in ROWS if "ERROR" in r]
+    if fails:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Betweenness Centrality (SSCA2 kernel 4) on the elastic executor.
+
+    PYTHONPATH=src python examples/betweenness_centrality.py
+
+R-MAT graph -> static source partition -> per-task batched Brandes on
+the accelerator (dense frontier matmuls) -> aggregated centrality map.
+Verifies against networkx and reports the paper-style characterization.
+"""
+import time
+
+import networkx as nx
+import numpy as np
+
+from repro.algorithms import (RMATParams, betweenness_centrality,
+                              rmat_graph)
+from repro.core import ElasticExecutor, characterize
+
+params = RMATParams(scale=8, edge_factor=8, seed=2)
+adj = rmat_graph(params)
+print(f"R-MAT graph: {params.n_vertices} vertices, "
+      f"{int(adj.sum())} edges (a={params.a}, skewed)")
+
+with ElasticExecutor(max_concurrency=8, invoke_overhead=1e-3,
+                     invoke_rate_limit=None) as pool:
+    t0 = time.monotonic()
+    res = betweenness_centrality(pool, params, n_tasks=16,
+                                 regenerate_graph=True)
+    wall = time.monotonic() - t0
+    ch = characterize(pool.stats.records)
+
+print(f"our BC: {wall:.2f}s over {res.tasks} tasks "
+      f"(each re-generates the graph, paper Listing 4 line 44)")
+print(f"task-duration CV: {ch.cv:.3f} "
+      f"(paper reports 0.23 — most balanced of the three)")
+
+print("verifying against networkx (exact Brandes) ...")
+t0 = time.monotonic()
+g = nx.from_numpy_array(adj, create_using=nx.DiGraph)
+ref = nx.betweenness_centrality(g, normalized=False)
+ref_arr = np.array([ref[i] for i in range(adj.shape[0])])
+print(f"  networkx: {time.monotonic()-t0:.2f}s")
+err = np.abs(res.betweenness - ref_arr).max()
+print(f"  max abs diff: {err:.2e}  "
+      f"({'OK' if err < 1e-2 else 'MISMATCH'})")
+
+top = np.argsort(res.betweenness)[::-1][:5]
+print("top-5 central vertices:",
+      [(int(v), round(float(res.betweenness[v]), 1)) for v in top])

@@ -1,0 +1,72 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Builds a ~100M-parameter gemma3-family config (real vocab, 6 layers of
+the 5:1 local:global pattern), streams the deterministic synthetic
+pipeline, runs the jitted+donated train step with async checkpointing,
+and prints the loss curve.  The identical code path runs the full
+assigned configs under ``make_production_mesh()`` on a pod.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.gemma3_1b import LOCAL, GLOBAL
+from repro.models.config import (AttentionConfig, BlockSpec, ModelConfig,
+                                 Stage)
+import repro.configs as configs
+import repro.launch.train as T
+
+
+def make_100m() -> ModelConfig:
+    local = AttentionConfig(n_heads=4, n_kv_heads=1, head_dim=64,
+                            rope_theta=10_000.0, sliding_window=256)
+    glob = AttentionConfig(n_heads=4, n_kv_heads=1, head_dim=64,
+                           rope_theta=1_000_000.0)
+    period = tuple([BlockSpec("attn", "mlp", attn_override=local)] * 5
+                   + [BlockSpec("attn", "mlp", attn_override=glob)])
+    return ModelConfig(
+        name="gemma3-100m", family="dense", d_model=512,
+        vocab_size=32_768, d_ff=2048, attention=glob,
+        stages=(Stage(1, period),), tie_embeddings=True, act="gelu",
+        subquadratic=True,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = make_100m()
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{cfg.n_layers} layers")
+
+    # register the config so the standard driver can resolve it
+    configs._MODULES["gemma3-100m"] = "gemma3_1b"  # module for smoke only
+    import repro.configs.gemma3_1b as g3
+    orig = g3.make_config
+    g3.make_config = make_100m
+    try:
+        out = T.train("gemma3-100m", smoke=False, steps=args.steps,
+                      global_batch=args.batch, seq_len=args.seq,
+                      ckpt_dir="/tmp/repro_100m_ckpt", ckpt_every=50,
+                      peak_lr=3e-4, log_every=10)
+    finally:
+        g3.make_config = orig
+    print(f"\nfirst loss {out['first_loss']:.3f} -> "
+          f"final loss {out['final_loss']:.3f} "
+          f"({out['tok_per_s']:.0f} tok/s on this host)")
+    if args.steps >= 100:  # warmup dominates shorter runs
+        assert out["final_loss"] < out["first_loss"], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

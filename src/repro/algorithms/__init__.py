@@ -1,0 +1,36 @@
+"""The paper's three irregular, unbalanced algorithms on the executor."""
+from .uts import (
+    Bag,
+    UTSParams,
+    UTSResult,
+    expand_bag,
+    expected_tree_size,
+    uts_parallel,
+    uts_sequential,
+)
+from .mariani_silver import (
+    Action,
+    MSParams,
+    MSResult,
+    Rect,
+    evaluate_rect,
+    mariani_silver,
+    naive_render,
+)
+from .betweenness import (
+    BCResult,
+    RMATParams,
+    bc_batch,
+    bc_single_node,
+    betweenness_centrality,
+    rmat_graph,
+)
+
+__all__ = [
+    "Bag", "UTSParams", "UTSResult", "expand_bag", "expected_tree_size",
+    "uts_parallel", "uts_sequential",
+    "Action", "MSParams", "MSResult", "Rect", "evaluate_rect",
+    "mariani_silver", "naive_render",
+    "BCResult", "RMATParams", "bc_batch", "bc_single_node",
+    "betweenness_centrality", "rmat_graph",
+]

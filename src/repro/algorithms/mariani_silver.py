@@ -1,0 +1,191 @@
+"""Mariani-Silver Mandelbrot rendering on the elastic executor (§4.1.2).
+
+Recursive adjacency optimization: evaluate only the border of each
+rectangle; if every border pixel has the same dwell, fill the rectangle
+with it (valid because the Mandelbrot set — and each dwell band — has a
+connected complement); otherwise split and recurse, with full per-pixel
+evaluation at the maximum depth.  Nested parallelism: each split spawns
+child tasks, exactly the dynamic-parallelism case study of the CUDA
+reference, here driven by the master's result queue (Listing 3).
+
+Task bodies call the Pallas escape-time kernel (repro.kernels.mandelbrot)
+for both border strips and leaf rectangles.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core import BaseExecutor
+from ..kernels.mandelbrot.ops import mandelbrot
+from ..kernels.mandelbrot.ref import coords
+
+__all__ = ["MSParams", "Rect", "Action", "RectResult",
+           "evaluate_rect", "mariani_silver", "naive_render", "MSResult"]
+
+
+@dataclass(frozen=True)
+class MSParams:
+    width: int = 4096
+    height: int = 4096
+    max_dwell: int = 512          # paper runs 5M; tests use smaller
+    x0: float = -2.0
+    y0: float = -1.5
+    x1: float = 1.0
+    y1: float = 1.5
+    split: int = 2                # each side halved -> 4 children
+    max_depth: int = 5
+    initial_subdivision: int = 4  # sd: initial grid of sd x sd rects
+
+
+@dataclass(frozen=True)
+class Rect:
+    """Pixel-space rectangle [px0, px1) x [py0, py1) at a nesting depth."""
+    px0: int
+    py0: int
+    px1: int
+    py1: int
+    depth: int
+
+    @property
+    def w(self) -> int:
+        return self.px1 - self.px0
+
+    @property
+    def h(self) -> int:
+        return self.py1 - self.py0
+
+
+class Action(Enum):
+    FILL = "fill"
+    SET_DWELL_ARRAY = "set_dwell_array"
+    SPLIT = "split"
+
+
+@dataclass
+class RectResult:
+    rect: Rect
+    action: Action
+    dwell_to_fill: int = 0
+    dwell_array: Optional[np.ndarray] = None
+
+
+def _pixel_coords(rect: Rect, p: MSParams):
+    """Complex-plane coordinates of the rect's pixel centers."""
+    sx = (p.x1 - p.x0) / p.width
+    sy = (p.y1 - p.y0) / p.height
+    xs = p.x0 + (np.arange(rect.px0, rect.px1) + 0.5) * sx
+    ys = p.y0 + (np.arange(rect.py0, rect.py1) + 0.5) * sy
+    c_im, c_re = np.meshgrid(ys, xs, indexing="ij")
+    return jnp.asarray(c_re, jnp.float32), jnp.asarray(c_im, jnp.float32)
+
+
+def _border_dwells(rect: Rect, p: MSParams) -> np.ndarray:
+    """Dwells of the rectangle's border pixels (flattened)."""
+    c_re, c_im = _pixel_coords(rect, p)
+    # Evaluate the 4 border strips as one [2, max(w,h)]-ish batch: cheaper
+    # to just gather border coords into a single row vector.
+    top = (c_re[0, :], c_im[0, :])
+    bot = (c_re[-1, :], c_im[-1, :])
+    left = (c_re[1:-1, 0], c_im[1:-1, 0])
+    right = (c_re[1:-1, -1], c_im[1:-1, -1])
+    bre = jnp.concatenate([top[0], bot[0], left[0], right[0]])[None, :]
+    bim = jnp.concatenate([top[1], bot[1], left[1], right[1]])[None, :]
+    return np.asarray(mandelbrot(bre, bim, p.max_dwell))[0]
+
+
+def evaluate_rect(rect: Rect, p: MSParams) -> RectResult:
+    """Task body — paper Listing 3 (``Callable.call``)."""
+    border = _border_dwells(rect, p)
+    if border.size and np.all(border == border[0]):
+        return RectResult(rect, Action.FILL, dwell_to_fill=int(border[0]))
+    if rect.depth >= p.max_depth or rect.w <= 2 or rect.h <= 2:
+        c_re, c_im = _pixel_coords(rect, p)
+        dwell = np.asarray(mandelbrot(c_re, c_im, p.max_dwell))
+        return RectResult(rect, Action.SET_DWELL_ARRAY, dwell_array=dwell)
+    return RectResult(rect, Action.SPLIT)
+
+
+def _split_rect(rect: Rect, split: int) -> List[Rect]:
+    xs = np.linspace(rect.px0, rect.px1, split + 1).astype(int)
+    ys = np.linspace(rect.py0, rect.py1, split + 1).astype(int)
+    out = []
+    for i in range(split):
+        for j in range(split):
+            if xs[j + 1] > xs[j] and ys[i + 1] > ys[i]:
+                out.append(Rect(xs[j], ys[i], xs[j + 1], ys[i + 1],
+                                rect.depth + 1))
+    return out
+
+
+@dataclass
+class MSResult:
+    image: np.ndarray
+    wall_time_s: float
+    tasks: int
+    filled_pixels: int
+    evaluated_pixels: int
+
+    @property
+    def throughput(self) -> float:
+        """Points (pixels) per second — paper's MP/s metric."""
+        return self.image.size / self.wall_time_s if self.wall_time_s else 0.0
+
+
+def mariani_silver(executor: BaseExecutor, p: MSParams) -> MSResult:
+    """Master loop: dispatch rect tasks, apply actions, recurse on SPLIT."""
+    t0 = time.monotonic()
+    image = np.zeros((p.height, p.width), np.int32)
+    filled = 0
+    evaluated = 0
+
+    initial: List[Rect] = []
+    sd = p.initial_subdivision
+    xs = np.linspace(0, p.width, sd + 1).astype(int)
+    ys = np.linspace(0, p.height, sd + 1).astype(int)
+    for i in range(sd):
+        for j in range(sd):
+            initial.append(Rect(xs[j], ys[i], xs[j + 1], ys[i + 1], 0))
+
+    pending = [executor.submit(evaluate_rect, r, p,
+                               cost_hint=float(r.w * r.h)) for r in initial]
+    while pending:
+        done_ix = [i for i, f in enumerate(pending) if f.done()]
+        if not done_ix:
+            pending[0].result()
+            done_ix = [i for i, f in enumerate(pending) if f.done()]
+        for i in sorted(done_ix, reverse=True):
+            f = pending.pop(i)
+            res: RectResult = f.result()
+            r = res.rect
+            if res.action is Action.FILL:
+                image[r.py0:r.py1, r.px0:r.px1] = res.dwell_to_fill
+                filled += r.w * r.h
+            elif res.action is Action.SET_DWELL_ARRAY:
+                image[r.py0:r.py1, r.px0:r.px1] = res.dwell_array
+                evaluated += r.w * r.h
+            else:  # SPLIT -> nested parallelism
+                for child in _split_rect(r, p.split):
+                    pending.append(executor.submit(
+                        evaluate_rect, child, p,
+                        cost_hint=float(child.w * child.h)))
+
+    return MSResult(
+        image=image,
+        wall_time_s=time.monotonic() - t0,
+        tasks=executor.stats.submitted,
+        filled_pixels=filled,
+        evaluated_pixels=evaluated,
+    )
+
+
+def naive_render(p: MSParams) -> np.ndarray:
+    """Escape-time over every pixel — the correctness oracle."""
+    full = Rect(0, 0, p.width, p.height, 0)
+    c_re, c_im = _pixel_coords(full, p)
+    return np.asarray(mandelbrot(c_re, c_im, p.max_dwell))

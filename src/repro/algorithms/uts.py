@@ -1,0 +1,254 @@
+"""Unbalanced Tree Search on the elastic executor (paper §4.1.1, Listing 2).
+
+UTS counts the nodes of a tree generated on the fly from SHA-1 digests:
+child ``i`` of a node is ``SHA1(parent || be32(i))`` and the number of
+children is Geometric(mean b0) with a depth cutoff.  The tree is wildly
+unbalanced, which is the whole point — static partitioning loses.
+
+Structure mirrors the paper exactly:
+
+* a ``Bag`` encapsulates a frontier of unexplored subtrees;
+* each task traverses at most ``iters`` nodes of its bag and returns the
+  leftover bag (``RemoteUTSCallable``);
+* the master drains a result queue, re-splits leftover bags with the
+  current split factor and re-dispatches (``uts`` loop of Listing 2);
+* the adaptive controller of §5.2 retunes (split_factor, iters) from the
+  live concurrency level.
+
+TPU adaptation: a task's traversal is *generation-vectorized* — the whole
+frontier advances one generation per step through the batched SHA-1
+Pallas kernel, instead of the canonical scalar DFS.  Node count semantics
+are identical (each node expanded exactly once).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core import (
+    BaseExecutor,
+    StagedController,
+    TaskShape,
+)
+import jax
+
+from ..kernels.uts_hash.ops import (
+    _bucket,
+    geometric_children,
+    root_digest,
+    uts_child_digests,
+)
+from ..kernels.uts_hash.numpy_impl import (
+    geometric_children_np,
+    uts_child_digests_np,
+)
+
+__all__ = ["Bag", "UTSParams", "UTSResult", "expand_bag",
+           "uts_sequential", "uts_parallel", "expected_tree_size"]
+
+
+@dataclass(frozen=True)
+class UTSParams:
+    seed: int = 19
+    b0: float = 4.0
+    max_depth: int = 18
+    #: nodes expanded per vectorized generation step inside a task
+    chunk: int = 8192
+
+
+@dataclass
+class Bag:
+    """A frontier of unexplored nodes: digests [5, n] uint32, depths [n]."""
+
+    digests: np.ndarray
+    depths: np.ndarray
+
+    @property
+    def size(self) -> int:
+        return int(self.depths.shape[0])
+
+    @staticmethod
+    def empty() -> "Bag":
+        return Bag(np.zeros((5, 0), np.uint32), np.zeros((0,), np.int32))
+
+    @staticmethod
+    def root(params: UTSParams) -> "Bag":
+        d = np.asarray(root_digest(params.seed))
+        return Bag(d, np.zeros((1,), np.int32))
+
+    def split(self, k: int) -> List["Bag"]:
+        """Resize into <= k sub-bags (paper's ``resizeBag``)."""
+        if self.size == 0:
+            return []
+        k = max(1, min(k, self.size))
+        cuts = np.array_split(np.arange(self.size), k)
+        return [Bag(self.digests[:, ix], self.depths[ix])
+                for ix in cuts if len(ix)]
+
+    @staticmethod
+    def merge(bags: List["Bag"]) -> "Bag":
+        bags = [b for b in bags if b.size]
+        if not bags:
+            return Bag.empty()
+        return Bag(np.concatenate([b.digests for b in bags], axis=1),
+                   np.concatenate([b.depths for b in bags]))
+
+
+def _expand_generation(digests: np.ndarray, depths: np.ndarray,
+                       params: UTSParams) -> Tuple[np.ndarray, np.ndarray]:
+    """Expand one generation of nodes -> (child_digests, child_depths).
+
+    Both jitted stages are padded to *fixed* bucket sizes derived from
+    ``params.chunk`` so an entire traversal compiles O(1) graphs (the
+    frontier size is irregular by construction; without this every
+    generation would recompile).
+    """
+    n = depths.shape[0]
+    if n == 0:
+        return np.zeros((5, 0), np.uint32), np.zeros((0,), np.int32)
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu:
+        # bucket-pad -> bounded set of compiled kernels; padding rows sit
+        # at max_depth and thus produce zero children.
+        nb = _bucket(n, floor=min(params.chunk, 4096))
+        dig_p = np.pad(digests, ((0, 0), (0, nb - n)))
+        dep_p = np.pad(depths, (0, nb - n),
+                       constant_values=params.max_depth)
+        counts = np.asarray(
+            geometric_children(jnp.asarray(dig_p), jnp.asarray(dep_p),
+                               b0=params.b0,
+                               max_depth=params.max_depth))[:n]
+    else:
+        counts = geometric_children_np(digests, depths, b0=params.b0,
+                                       max_depth=params.max_depth)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros((5, 0), np.uint32), np.zeros((0,), np.int32)
+    parent_ix = np.repeat(np.arange(n), counts)
+    # child index within each parent: 0..m_i-1
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    child_ix = (np.arange(total) - offsets[parent_ix]).astype(np.uint32)
+    parents = digests[:, parent_ix]
+    if not on_tpu:
+        children = uts_child_digests_np(parents, child_ix)
+        return children, (depths[parent_ix] + 1).astype(np.int32)
+    # TPU: hash in fixed-size slices -> single compiled Pallas dispatch
+    hb = 4 * min(params.chunk, 4096)
+    outs = []
+    for s in range(0, total, hb):
+        e = min(s + hb, total)
+        par = np.pad(parents[:, s:e], ((0, 0), (0, hb - (e - s))))
+        cix = np.pad(child_ix[s:e], (0, hb - (e - s)))
+        outs.append(np.asarray(uts_child_digests(
+            jnp.asarray(par), jnp.asarray(cix)))[:, :e - s])
+    children = np.concatenate(outs, axis=1)
+    return children, (depths[parent_ix] + 1).astype(np.int32)
+
+
+def expand_bag(bag: Bag, iters: int,
+               params: UTSParams) -> Tuple[int, Bag]:
+    """Traverse up to ``iters`` nodes of ``bag``; return (count, leftover).
+
+    This is the task body (``RemoteUTSCallable.call`` in Listing 2): a
+    pure function of its inputs — stateless, hence re-dispatchable.
+    LIFO order (children pushed on top) keeps the open frontier bounded
+    the way the canonical DFS does, generation-vectorized in chunks.
+    """
+    count = 0
+    stack = bag
+    while count < iters and stack.size:
+        budget = iters - count
+        take = min(stack.size, budget, params.chunk)
+        head = Bag(stack.digests[:, -take:], stack.depths[-take:])
+        rest = Bag(stack.digests[:, :-take], stack.depths[:-take])
+        count += take
+        children, depths = _expand_generation(head.digests, head.depths,
+                                              params)
+        stack = Bag.merge([rest, Bag(children, depths)])
+    return count, stack
+
+
+def uts_sequential(params: UTSParams,
+                   node_limit: Optional[int] = None) -> int:
+    """Single-threaded reference count (paper's 'Sequential' row)."""
+    count, leftover = expand_bag(Bag.root(params),
+                                 node_limit or 2**62, params)
+    if leftover.size:
+        raise RuntimeError("node_limit hit before traversal finished")
+    return count
+
+
+@dataclass
+class UTSResult:
+    count: int
+    wall_time_s: float
+    tasks: int
+    params: UTSParams
+    peak_concurrency: int = 0
+    controller_transitions: list = field(default_factory=list)
+
+    @property
+    def throughput(self) -> float:
+        """Nodes per second (the paper's headline metric)."""
+        return self.count / self.wall_time_s if self.wall_time_s else 0.0
+
+
+def uts_parallel(
+    executor: BaseExecutor,
+    params: UTSParams,
+    *,
+    shape: TaskShape = TaskShape(split_factor=8, iters=50_000),
+    controller: Optional[StagedController] = None,
+    initial_split: Optional[int] = None,
+) -> UTSResult:
+    """Paper Listing 2 (master loop) with optional Listing 5 controller."""
+    t0 = time.monotonic()
+    total = 0
+    active = 0
+    pending: List = []
+
+    def dispatch(bag: Bag, shp: TaskShape) -> None:
+        nonlocal active
+        for sub in bag.split(shp.split_factor if bag.size > 1 else 1):
+            active += 1
+            pending.append(executor.submit(
+                expand_bag, sub, shp.iters, params,
+                cost_hint=float(sub.size)))
+
+    dispatch(Bag.root(params),
+             TaskShape(initial_split or shape.split_factor, shape.iters))
+
+    while pending:
+        # drain whichever futures are done; block on the oldest otherwise
+        done_ix = [i for i, f in enumerate(pending) if f.done()]
+        if not done_ix:
+            pending[0].result()
+            done_ix = [i for i, f in enumerate(pending) if f.done()]
+        for i in sorted(done_ix, reverse=True):
+            f = pending.pop(i)
+            count, leftover = f.result()
+            active -= 1
+            total += count
+            if controller is not None:
+                shape = controller.update(active)
+            if leftover.size:
+                dispatch(leftover, shape)
+
+    return UTSResult(
+        count=total,
+        wall_time_s=time.monotonic() - t0,
+        tasks=executor.stats.submitted,
+        params=params,
+        peak_concurrency=executor.stats.peak_concurrency,
+        controller_transitions=(controller.transitions
+                                if controller is not None else []),
+    )
+
+
+def expected_tree_size(b0: float, depth: int) -> float:
+    """E[#nodes] = sum_{l=0}^{depth} b0^l — the Table 1 growth law."""
+    return (b0 ** (depth + 1) - 1) / (b0 - 1)

@@ -1,0 +1,511 @@
+"""Static cost analysis over optimized (post-SPMD) HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` visits each while body ONCE,
+so any scan-over-layers model is undercounted by the trip count (we
+measured 8x on an 8-step scan).  This module re-derives the roofline
+terms from the HLO text itself, walking the computation call graph and
+multiplying while bodies by their trip counts (read from the loop
+condition's comparison constant):
+
+  flops     2*M*N*K for dot/convolution (operand types are inline in
+            HLO text) + 1/element for other instructions (incl. fused
+            subcomputations)
+  bytes     HBM traffic proxy: result + operand bytes of *top-level*
+            instructions (fusion internals excluded, matching
+            HloCostAnalysis semantics)
+  coll      per-collective-kind bytes with ring-cost factors:
+            all-reduce 2x result, all-gather result, reduce-scatter
+            operand, all-to-all result, collective-permute result
+
+All shapes in post-SPMD HLO are per-device (local), so every number is
+per-device — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "collective_bytes", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_HEAD_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)")
+
+
+def _comp_start(line: str):
+    """Computation header: 'name (params) -> type {' (layout braces in
+    the params/type make a strict regex brittle; detect structurally)."""
+    s = line.rstrip()
+    if not s.endswith("{") or line[:1].isspace():
+        return None
+    if "=" in s.split("(", 1)[0]:
+        return None
+    if not (s.lstrip().startswith("ENTRY") or " -> " in s
+            or re.match(r"^%[\w\.\-]+\s*\(", s)):
+        return None
+    m = _COMP_NAME_RE.match(s.lstrip())
+    return m.group(1) if m else None
+_CALLEE_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|branch_computations)="
+    r"\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = {
+    "all-reduce": "all_reduce", "all-reduce-start": "all_reduce",
+    "all-gather": "all_gather", "all-gather-start": "all_gather",
+    "reduce-scatter": "reduce_scatter",
+    "all-to-all": "all_to_all",
+    "collective-permute": "collective_permute",
+    "collective-permute-start": "collective_permute",
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    opcode: str
+    operands_str: str
+    attrs: str
+
+    def callees(self) -> List[str]:
+        out = []
+        for m in _CALLEE_RE.finditer(self.attrs):
+            for c in m.group(1).split(","):
+                out.append(c.strip().lstrip("%"))
+        return out
+
+    def operand_names(self) -> List[str]:
+        return _OPERAND_NAME_RE.findall(self.operands_str)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    symtab: Dict[str, str] = field(default_factory=dict)
+    params: List[str] = field(default_factory=list)   # in parameter order
+
+    def finish(self) -> None:
+        order = {}
+        for ins in self.instrs:
+            self.symtab[ins.name] = ins.result_type
+            if ins.opcode == "parameter":
+                try:
+                    order[int(ins.operands_str.strip())] = ins.name
+                except ValueError:
+                    pass
+        self.params = [order[i] for i in sorted(order)]
+
+    def operand_types(self, ins: Instr) -> List[str]:
+        return [self.symtab.get(n, "") for n in ins.operand_names()]
+
+    def _terminal_uses(self, name: str, depth: int = 0):
+        """Consumers of ``name``, looking through bitcast/reshape/copy
+        chains (XLA aliasing survives those)."""
+        outs = []
+        if depth > 8:
+            return outs
+        for ins in self.instrs:
+            if name in ins.operand_names():
+                if ins.opcode in ("bitcast", "reshape", "copy"):
+                    sub = self._terminal_uses(ins.name, depth + 1)
+                    outs.extend(sub if sub else [(ins, name)])
+                else:
+                    outs.append((ins, name))
+        return outs
+
+    def effective_param_bytes(self) -> List[Optional[int]]:
+        """Per-parameter HBM read size when this computation runs as a
+        fusion body.  A parameter consumed ONLY by dynamic-slice reads
+        only the slices; one consumed only as a dynamic-update-slice
+        destination is aliased in place (0 bytes here — the update is
+        costed at the root).  None = full size."""
+        out: List[Optional[int]] = []
+        for pname in self.params:
+            uses = self._terminal_uses(pname)
+            if uses and all(u.opcode == "dynamic-slice" for u, _ in uses):
+                out.append(sum(_type_bytes(u.result_type)
+                               for u, _ in uses))
+            elif uses and all(
+                    u.opcode == "dynamic-update-slice"
+                    and u.operand_names()
+                    and u.operand_names()[0] == via
+                    for u, via in uses):
+                out.append(0)
+            else:
+                out.append(None)
+        return out
+
+    def root_writes_in_place(self) -> Optional[int]:
+        """If the fusion's dataflow ends in a dynamic-update-slice
+        (possibly behind elementwise ops), the output aliases the big
+        operand: the write is the update slice.  Returns update bytes
+        or None."""
+        for ins in self.instrs:
+            if ins.opcode == "dynamic-update-slice":
+                ots = self.operand_types(ins)
+                if len(ots) > 1:
+                    return _type_bytes(ots[1])
+        return None
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    link_bytes: float = 0.0
+    while_trips: List[int] = field(default_factory=list)
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(
+            flops=self.flops * k, bytes=self.bytes * k,
+            transcendentals=self.transcendentals * k,
+            collectives={n: v * k for n, v in self.collectives.items()},
+            collective_counts={n: int(v * k) for n, v
+                               in self.collective_counts.items()},
+            link_bytes=self.link_bytes * k,
+            while_trips=list(self.while_trips),
+        )
+
+    def add(self, other: "HloCost") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.transcendentals += other.transcendentals
+        self.link_bytes += other.link_bytes
+        for n, v in other.collectives.items():
+            self.collectives[n] = self.collectives.get(n, 0.0) + v
+        for n, v in other.collective_counts.items():
+            self.collective_counts[n] = \
+                self.collective_counts.get(n, 0) + v
+        self.while_trips.extend(other.while_trips)
+
+
+def _parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry_name = None
+    for line in hlo.splitlines():
+        if current is None:
+            name = _comp_start(line)
+            if name is not None:
+                current = Computation(name)
+                if line.lstrip().startswith("ENTRY"):
+                    entry_name = name
+            continue
+        if line.strip() == "}":
+            current.finish()
+            comps[current.name] = current
+            current = None
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            current.instrs.append(ins)
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _parse_instr(line: str) -> Optional["Instr"]:
+    m = _INSTR_HEAD_RE.match(line)
+    if m is None:
+        return None
+    name, rtype, opcode = m.groups()
+    # balance parens from the opcode's '(' to split operands vs attrs
+    start = m.end()  # index just past '('
+    depth = 1
+    i = start
+    while i < len(line) and depth:
+        ch = line[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        i += 1
+    operands = line[start:i - 1]
+    attrs = line[i:]
+    return Instr(name, rtype, opcode, operands, attrs)
+
+
+def _fusion_traffic(ins: Instr, comp: Computation,
+                    callee: Computation) -> int:
+    """HBM traffic of one fusion call with in-place awareness:
+    reads  = per-parameter effective sizes (dynamic-slice params read
+             only the slice; aliased DUS destinations read nothing),
+    writes = update size if the fusion ends in a DUS, else the result."""
+    op_types = comp.operand_types(ins)
+    eff = callee.effective_param_bytes()
+    reads = 0
+    for i, t in enumerate(op_types):
+        e = eff[i] if i < len(eff) else None
+        reads += _type_bytes(t) if e is None else e
+    dus = callee.root_writes_in_place()
+    writes = dus if dus is not None else _type_bytes(ins.result_type)
+    return reads + writes
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    """2 x prod(result) x prod(contracting dims of lhs)."""
+    result_elems = _type_elems(instr.result_type)
+    op_types = comp.operand_types(instr)
+    if not op_types or not op_types[0]:
+        return 2.0 * result_elems  # unknown lhs: floor estimate
+    ms = _SHAPE_RE.findall(op_types[0])
+    if not ms:
+        return 2.0 * result_elems
+    lhs_dims = [int(d) for d in ms[0][1].split(",") if d]
+    m = _CONTRACT_RE.search(instr.attrs)
+    contract = 1
+    if m and m.group(1):
+        for ix in m.group(1).split(","):
+            i = int(ix)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * result_elems * contract
+
+
+_TRANS_OPS = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+              "logistic", "sine", "cosine", "exponential-minus-one"}
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound = the largest integer constant in the condition (jax
+    scans lower to ``lt(iter, constant(N))``; the bound may sit behind a
+    wrapped-compare fusion, but the constant lives in the cond body)."""
+    consts = []
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            try:
+                consts.append(int(ins.operands_str.strip()))
+            except ValueError:
+                pass
+    return max(consts) if consts else 1
+
+
+def _cost_of(comp: Computation, comps: Dict[str, Computation],
+             memo: Dict[str, HloCost], fused: bool) -> HloCost:
+    key = comp.name + ("#f" if fused else "")
+    if key in memo:
+        return memo[key]
+    memo[key] = HloCost()  # cycle guard
+    total = HloCost()
+    for ins in comp.instrs:
+        op = ins.opcode
+        operand_bytes = sum(_type_bytes(t) for t in comp.operand_types(ins))
+        if op == "while":
+            body = cond = None
+            m_body = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+            m_cond = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+            if m_body:
+                body = comps.get(m_body.group(1))
+            if m_cond:
+                cond = comps.get(m_cond.group(1))
+            m_trip = _TRIP_RE.search(ins.attrs)
+            if m_trip:  # XLA records it: backend_config known_trip_count
+                trips = int(m_trip.group(1))
+            else:
+                trips = _trip_count(cond) if cond else 1
+            total.while_trips.append(trips)
+            if body:
+                total.add(_cost_of(body, comps, memo, fused).scaled(trips))
+            if cond:
+                total.add(_cost_of(cond, comps, memo, fused).scaled(trips))
+            continue
+        if op == "fusion":
+            fusion_bytes = None
+            for cn in ins.callees():
+                if cn in comps:
+                    callee = comps[cn]
+                    sub = _cost_of(callee, comps, memo, True)
+                    total.flops += sub.flops
+                    total.transcendentals += sub.transcendentals
+                    total.add(HloCost(collectives=dict(sub.collectives),
+                                      collective_counts=dict(
+                                          sub.collective_counts),
+                                      link_bytes=sub.link_bytes))
+                    if not fused:
+                        fusion_bytes = _fusion_traffic(ins, comp, callee)
+            if not fused:
+                if fusion_bytes is None:
+                    fusion_bytes = _type_bytes(ins.result_type) \
+                        + operand_bytes
+                total.bytes += fusion_bytes
+            continue
+        if op in ("call", "conditional", "custom-call", "map", "sort",
+                  "select-and-scatter"):
+            for cn in ins.callees():
+                if cn in comps:
+                    total.add(_cost_of(comps[cn], comps, memo, fused))
+        if op in _COLLECTIVES:
+            kind = _COLLECTIVES[op]
+            rb = _type_bytes(ins.result_type)
+            ob = operand_bytes
+            link = {"all_reduce": 2.0 * rb, "all_gather": float(rb),
+                    "reduce_scatter": float(ob),
+                    "all_to_all": float(rb),
+                    "collective_permute": float(rb)}[kind]
+            total.collectives[kind] = total.collectives.get(kind, 0) + link
+            total.collective_counts[kind] = \
+                total.collective_counts.get(kind, 0) + 1
+            total.link_bytes += link
+            if not fused:
+                total.bytes += rb + ob
+            continue
+        # generic instruction
+        if op in ("dot", "convolution"):
+            total.flops += _dot_flops(ins, comp)
+        elif op in _TRANS_OPS:
+            total.transcendentals += _type_elems(ins.result_type)
+            total.flops += _type_elems(ins.result_type)
+        elif op not in ("parameter", "constant", "get-tuple-element",
+                        "tuple", "bitcast", "copy-start", "copy-done",
+                        "after-all", "partition-id", "replica-id",
+                        "dynamic-slice", "dynamic-update-slice"):
+            total.flops += _type_elems(ins.result_type)
+        if fused:
+            continue
+        # HBM traffic. In-place ops must not count the whole buffer:
+        #   dynamic-slice reads only the slice (result); d-u-s writes
+        #   only the update (operand 1) — XLA aliases the big operand.
+        if op == "dynamic-slice":
+            total.bytes += 2 * _type_bytes(ins.result_type)
+        elif op == "dynamic-update-slice":
+            ots = comp.operand_types(ins)
+            upd = _type_bytes(ots[1]) if len(ots) > 1 else 0
+            total.bytes += 2 * upd
+        elif op == "scatter":
+            # in-place: destination aliased; traffic = indices + updates
+            ots = comp.operand_types(ins)
+            total.bytes += 2 * sum(_type_bytes(t) for t in ots[1:])
+        elif op not in ("parameter", "constant", "get-tuple-element",
+                        "tuple", "bitcast"):
+            total.bytes += _type_bytes(ins.result_type) + operand_bytes
+    memo[key] = total
+    return total
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps = _parse_computations(hlo)
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found")
+    memo: Dict[str, HloCost] = {}
+    return _cost_of(comps["__entry__"], comps, memo, False)
+
+
+def top_bytes_contributors(hlo: str, k: int = 15) -> List[Tuple[str, float]]:
+    """Largest trip-weighted HBM-traffic instructions — the profile view
+    the §Perf loop forms hypotheses from.  Returns (description, bytes)."""
+    comps = _parse_computations(hlo)
+    # trip multiplier per computation, found by walking whiles from entry
+    mult: Dict[str, float] = {}
+
+    def walk(comp: Computation, m: float) -> None:
+        if mult.get(comp.name, 0) >= m:
+            return
+        mult[comp.name] = m
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                m_body = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+                m_trip = _TRIP_RE.search(ins.attrs)
+                trips = int(m_trip.group(1)) if m_trip else 1
+                if m_body and m_body.group(1) in comps:
+                    walk(comps[m_body.group(1)], m * trips)
+            else:
+                for cn in ins.callees():
+                    if cn in comps:
+                        walk(comps[cn], m)
+
+    walk(comps["__entry__"], 1.0)
+    # computations reached only as fusion bodies don't touch HBM per-op
+    fusion_bodies = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                fusion_bodies.update(ins.callees())
+    rows: List[Tuple[str, float]] = []
+    for cname, m in mult.items():
+        if cname in fusion_bodies:
+            continue
+        comp = comps[cname]
+        for ins in comp.instrs:
+            if ins.opcode in ("parameter", "constant",
+                              "get-tuple-element", "tuple", "bitcast",
+                              "while"):
+                continue
+            if ins.opcode == "fusion":
+                callee = next((comps[c] for c in ins.callees()
+                               if c in comps), None)
+                b = _fusion_traffic(ins, comp, callee) if callee else 0
+            elif ins.opcode == "dynamic-update-slice":
+                ots = comp.operand_types(ins)
+                b = 2 * _type_bytes(ots[1]) if len(ots) > 1 else 0
+            elif ins.opcode == "dynamic-slice":
+                b = 2 * _type_bytes(ins.result_type)
+            elif ins.opcode == "scatter":
+                ots = comp.operand_types(ins)
+                b = 2 * sum(_type_bytes(t) for t in ots[1:])
+            else:
+                b = _type_bytes(ins.result_type) + sum(
+                    _type_bytes(t) for t in comp.operand_types(ins))
+            if b * m > 0:
+                rows.append((f"{cname}/{ins.name} [{ins.opcode}] "
+                             f"x{int(m)} {ins.result_type[:48]}", b * m))
+    rows.sort(key=lambda r: -r[1])
+    return rows[:k]
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Trip-count-aware collective summary (kind -> link bytes/device)."""
+    cost = analyze_hlo(hlo)
+    return {
+        "link_bytes": cost.link_bytes,
+        "by_kind": dict(cost.collectives),
+        "counts": dict(cost.collective_counts),
+        "while_trips": cost.while_trips[:32],
+    }

@@ -1,0 +1,37 @@
+"""The paper's own workload configurations (Table 2 / §4.4).
+
+These are the exact parameterizations evaluated by Finol et al.:
+  UTS              seed=19, b0=4, d=18 (Table 1 sweeps d=14..18)
+  Mariani-Silver   4096x4096, max dwell 5M, sd in {64, 256}, depth {5, 4}
+  BC               SSCA2 kernel 4, R-MAT (0.55,0.1,0.1,0.25), seed=2,
+                   T=128 tasks, scale N=17
+
+``*_SCALED`` variants are laptop-scale versions (same structure, smaller
+exponents) used by the test-suite and benchmark harness on one CPU core;
+the full-size parameters are what launch scripts submit on a pod.
+"""
+from repro.algorithms.betweenness import RMATParams
+from repro.algorithms.mariani_silver import MSParams
+from repro.algorithms.uts import UTSParams
+
+# -- paper-exact --------------------------------------------------------------
+UTS_PAPER = UTSParams(seed=19, b0=4.0, max_depth=18)
+UTS_TABLE1_DEPTHS = (14, 15, 16, 17, 18)
+
+MS_PAPER_SD64 = MSParams(width=4096, height=4096, max_dwell=5_000_000,
+                         initial_subdivision=64, max_depth=5, split=2)
+MS_PAPER_SD256 = MSParams(width=4096, height=4096, max_dwell=5_000_000,
+                          initial_subdivision=256, max_depth=4, split=2)
+
+BC_PAPER = RMATParams(scale=17, edge_factor=8, seed=2,
+                      a=0.55, b=0.10, c=0.10, d=0.25)
+BC_PAPER_TASKS = 128
+
+# -- laptop-scale -------------------------------------------------------------
+UTS_SCALED = UTSParams(seed=19, b0=4.0, max_depth=10, chunk=4096)
+# max_dwell high + coarse initial grid -> the paper's heavy task tail
+# (interior in-set rectangles cost ~1000x a uniform border check)
+MS_SCALED = MSParams(width=384, height=384, max_dwell=2048,
+                     initial_subdivision=2, max_depth=5, split=2)
+BC_SCALED = RMATParams(scale=8, edge_factor=8, seed=2)
+BC_SCALED_TASKS = 32

@@ -1,0 +1,49 @@
+"""Core elastic-executor middleware — the paper's primary contribution.
+
+Public API:
+    LocalExecutor, ElasticExecutor, HybridExecutor, as_completed
+    ElasticFuture, Task, TaskRecord
+    StagedController, OccupancyController, TaskShape
+    serverless_cost, vm_cost, emr_cluster_cost, price_performance
+    characterize, coefficient_of_variation
+"""
+from .futures import ElasticFuture, Task, TaskRecord, TaskState
+from .executor import (
+    BaseExecutor,
+    ElasticExecutor,
+    FunctionThrottledError,
+    LocalExecutor,
+    as_completed,
+)
+from .hybrid import HybridExecutor
+from .adaptive import OccupancyController, StagedController, TaskShape
+from .costmodel import (
+    CostReport,
+    LambdaPrice,
+    TPUPrice,
+    VMPrice,
+    emr_cluster_cost,
+    price_performance,
+    serverless_cost,
+    tpu_slice_cost,
+    vm_cost,
+)
+from .characterization import (
+    Characterization,
+    characterize,
+    coefficient_of_variation,
+    duration_cdf,
+    task_generation_rate,
+)
+
+__all__ = [
+    "ElasticFuture", "Task", "TaskRecord", "TaskState",
+    "BaseExecutor", "ElasticExecutor", "LocalExecutor", "HybridExecutor",
+    "FunctionThrottledError", "as_completed",
+    "StagedController", "OccupancyController", "TaskShape",
+    "CostReport", "LambdaPrice", "VMPrice", "TPUPrice",
+    "serverless_cost", "vm_cost", "emr_cluster_cost", "tpu_slice_cost",
+    "price_performance",
+    "Characterization", "characterize", "coefficient_of_variation",
+    "duration_cdf", "task_generation_rate",
+]

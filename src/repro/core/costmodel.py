@@ -1,0 +1,146 @@
+"""Cost model (paper §4.3 Eq. 3-7, §6 Eq. 8, Table 3 prices).
+
+    Cost_serverless = Cost_invocations + Cost_execution + Cost_client   (3)
+    Cost_invocations = lambda_i * n                                     (4)
+    Cost_execution   = lambda_e * (MB/1024) * sum_i t_i                 (5)
+    Cost_client      = VM_price/3600 * t_total                          (6)
+    R_price_perf     = Throughput / Cost                                (7)
+    Cost_EMR         = t/3600 * (workers*worker_price + master_price)   (8)
+
+The same accounting generalizes to TPU device-seconds (``TPUPrice``): a
+pod slice billed per chip-hour is the "VM", an elastic slice acquired per
+task is the "function".  This is what makes the paper's cost-performance
+methodology portable to the pod framework.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Optional
+
+from .futures import TaskRecord
+
+__all__ = [
+    "LambdaPrice", "VMPrice", "TPUPrice", "CostReport",
+    "serverless_cost", "vm_cost", "emr_cluster_cost",
+    "price_performance",
+]
+
+# -- Table 3 -----------------------------------------------------------------
+LAMBDA_INVOCATION_PRICE = 0.0000002        # $ / invocation  (lambda_i)
+LAMBDA_GBS_PRICE = 0.0000166667            # $ / GB-second   (lambda_e)
+VM_PRICES = {                               # $ / hour, on-demand
+    "m5.xlarge": 0.192,
+    "m5.2xlarge": 0.384,
+    "c5.2xlarge": 0.34,
+    "c5.9xlarge": 1.53,
+    "c5.12xlarge": 2.04,
+    "c5.18xlarge": 3.06,
+    "c5.24xlarge": 4.08,
+    "c5.24xlarge-emr": 4.35,               # EMR on-demand (Eq. 8)
+    "m5.2xlarge-emr": 0.48,                # EMR master (Eq. 8)
+}
+TPU_V5E_CHIP_HOUR = 1.20                    # $/chip-hour, on-demand list
+
+
+@dataclass(frozen=True)
+class LambdaPrice:
+    invocation: float = LAMBDA_INVOCATION_PRICE
+    gb_second: float = LAMBDA_GBS_PRICE
+    memory_mb: int = 1769  # ~1 full vCPU per AWS docs (paper §4.4)
+
+
+@dataclass(frozen=True)
+class VMPrice:
+    hourly: float
+
+    @classmethod
+    def named(cls, name: str) -> "VMPrice":
+        return cls(hourly=VM_PRICES[name])
+
+
+@dataclass(frozen=True)
+class TPUPrice:
+    chip_hourly: float = TPU_V5E_CHIP_HOUR
+    chips: int = 256
+
+
+@dataclass
+class CostReport:
+    invocations: float = 0.0
+    execution: float = 0.0
+    client: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.invocations + self.execution + self.client
+
+    def as_dict(self) -> dict:
+        return {
+            "invocations_usd": self.invocations,
+            "execution_usd": self.execution,
+            "client_usd": self.client,
+            "total_usd": self.total,
+        }
+
+
+def serverless_cost(
+    records: Iterable[TaskRecord],
+    *,
+    wall_time_s: float,
+    price: LambdaPrice = LambdaPrice(),
+    client_vm: Optional[VMPrice] = None,
+    billing_granularity_s: float = 0.001,  # Lambda bills per ms
+) -> CostReport:
+    """Eq. 3-6 over an executor's completion records.
+
+    Only *remote* records are billed as invocations/execution; the client
+    VM is billed for the whole wall time (the master runs throughout).
+    """
+    remote = [r for r in records if r.remote]
+    n = sum(r.attempts for r in remote)  # every attempt is an invocation
+    gb = price.memory_mb / 1024.0
+    billed = sum(
+        max(billing_granularity_s,
+            _ceil_to(r.duration, billing_granularity_s)) * r.attempts
+        for r in remote
+    )
+    client = client_vm or VMPrice.named("m5.xlarge")
+    return CostReport(
+        invocations=price.invocation * n,
+        execution=price.gb_second * gb * billed,
+        client=client.hourly / 3600.0 * wall_time_s,
+    )
+
+
+def _ceil_to(x: float, g: float) -> float:
+    import math
+    return math.ceil(x / g) * g
+
+
+def vm_cost(wall_time_s: float, vm: VMPrice,
+            minimum_billing_s: float = 1.0) -> CostReport:
+    """On-demand VM cost (Table 6 note: 1 s minimum billing period)."""
+    t = max(wall_time_s, minimum_billing_s)
+    return CostReport(client=vm.hourly / 3600.0 * t)
+
+
+def emr_cluster_cost(wall_time_s: float, *, workers: int,
+                     worker: VMPrice = VMPrice.named("c5.24xlarge-emr"),
+                     master: VMPrice = VMPrice.named("m5.2xlarge-emr"),
+                     ) -> CostReport:
+    """Eq. 8 — Spark/EMR cluster."""
+    hourly = workers * worker.hourly + master.hourly
+    return CostReport(client=hourly / 3600.0 * wall_time_s)
+
+
+def tpu_slice_cost(wall_time_s: float, price: TPUPrice) -> CostReport:
+    """Device-seconds accounting for a pod slice (framework-side)."""
+    return CostReport(client=price.chips * price.chip_hourly / 3600.0
+                      * wall_time_s)
+
+
+def price_performance(throughput: float, cost: CostReport) -> float:
+    """Eq. 7 — throughput per dollar (M nodes/s/$, MP/s/$, tok/s/$...)."""
+    if cost.total <= 0:
+        return float("inf")
+    return throughput / cost.total

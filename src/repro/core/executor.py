@@ -1,0 +1,344 @@
+"""Elastic executor middleware — the paper's primary contribution (§3.1).
+
+The paper's ``ServerlessExecutor`` (borrowed from Crucial) runs Java
+``Callable`` tasks as stateless cloud functions under a master-worker
+model.  We reproduce that abstraction for a TPU/JAX framework:
+
+* ``LocalExecutor``       — the paper's local thread pool (18 us overhead).
+* ``ElasticExecutor``     — the ServerlessExecutor analogue: an elastic
+                            pool of stateless workers with FaaS-style
+                            invocation overhead (~13 ms, Table 4), a hard
+                            concurrency limit (Lambda: 1 000/2 000) and an
+                            invocation-frequency limit (10 000/s on AWS).
+* worker backends         — ``inline`` (deterministic, for tests),
+                            ``thread`` (real host threads; on a pod each
+                            worker owns a mesh slice).
+
+Every completion is appended to a ``TaskRecord`` log consumed by
+``characterization.py`` (C_L, task-rate, CDF — paper §4.2) and
+``costmodel.py`` (Eq. 3-7).
+
+Semantics intentionally mirrored from the paper:
+  * tasks are stateless ⇒ re-execution is safe (used for straggler
+    re-dispatch and fault recovery, `speculative_deadline`);
+  * the client enforces the concurrency limit, never the platform;
+  * results flow back through a queue drained by the master
+    (``as_completed`` / ``result_queue``).
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from typing import Any, Callable, Iterable, Iterator, List, Optional, Sequence
+
+from .futures import ElasticFuture, Task, TaskRecord, TaskState
+
+__all__ = [
+    "ExecutorStats",
+    "BaseExecutor",
+    "LocalExecutor",
+    "ElasticExecutor",
+    "FunctionThrottledError",
+]
+
+
+class FunctionThrottledError(RuntimeError):
+    """Raised when the platform's hard concurrency limit would be exceeded
+    *and* the executor was configured to reject rather than queue
+    (mirrors AWS Lambda's throttling exception, paper §3.1)."""
+
+
+class ExecutorStats:
+    """Thread-safe running statistics of an executor pool."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.retries = 0
+        self.active = 0
+        self.peak_concurrency = 0
+        self.invocations = 0  # billable invocations (includes retries)
+        self.records: List[TaskRecord] = []
+        self.concurrency_trace: List[tuple] = []  # (t, active) samples
+
+    def _sample(self) -> None:
+        self.concurrency_trace.append((time.monotonic(), self.active))
+
+    def on_submit(self) -> None:
+        with self._lock:
+            self.submitted += 1
+
+    def on_start(self) -> None:
+        with self._lock:
+            self.active += 1
+            self.invocations += 1
+            self.peak_concurrency = max(self.peak_concurrency, self.active)
+            self._sample()
+
+    def on_finish(self, record: Optional[TaskRecord], ok: bool) -> None:
+        with self._lock:
+            self.active -= 1
+            if ok:
+                self.completed += 1
+            else:
+                self.failed += 1
+            if record is not None:
+                self.records.append(record)
+            self._sample()
+
+    def on_retry(self) -> None:
+        with self._lock:
+            self.retries += 1
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "retries": self.retries,
+                "active": self.active,
+                "peak_concurrency": self.peak_concurrency,
+                "invocations": self.invocations,
+            }
+
+
+class BaseExecutor:
+    """Common machinery: worker threads pulling from a bounded queue."""
+
+    #: human-readable pool kind ("local" | "elastic")
+    kind: str = "base"
+    #: whether completions are billed as remote invocations
+    remote: bool = False
+
+    def __init__(
+        self,
+        max_concurrency: int,
+        *,
+        invoke_overhead: float = 0.0,
+        invoke_rate_limit: Optional[float] = None,
+        throttle_mode: str = "queue",  # "queue" | "reject"
+        failure_rate: float = 0.0,
+        max_attempts: int = 3,
+        seed: int = 0,
+        name: Optional[str] = None,
+    ) -> None:
+        if max_concurrency <= 0:
+            raise ValueError("max_concurrency must be positive")
+        self.max_concurrency = max_concurrency
+        self.invoke_overhead = invoke_overhead
+        self.invoke_rate_limit = invoke_rate_limit
+        self.throttle_mode = throttle_mode
+        self.failure_rate = failure_rate
+        self.max_attempts = max_attempts
+        self.name = name or f"{self.kind}-pool"
+        self.stats = ExecutorStats()
+        self._queue: "queue.Queue" = queue.Queue()
+        self._shutdown = False
+        self._rng_state = seed or 0x9E3779B9
+        self._rate_lock = threading.Lock()
+        self._last_invoke = 0.0
+        self._workers: List[threading.Thread] = []
+        self._workers_lock = threading.Lock()
+        self._started = False
+
+    # -- worker management ------------------------------------------------
+    def _ensure_workers(self) -> None:
+        with self._workers_lock:
+            if self._started:
+                return
+            self._started = True
+            for i in range(self.max_concurrency):
+                t = threading.Thread(
+                    target=self._worker_loop,
+                    args=(f"{self.name}-w{i}",),
+                    daemon=True,
+                )
+                t.start()
+                self._workers.append(t)
+
+    def _worker_loop(self, worker_name: str) -> None:
+        while True:
+            item = self._queue.get()
+            if item is None:  # shutdown sentinel
+                self._queue.task_done()
+                return
+            task, future = item
+            try:
+                self._run_one(task, future, worker_name)
+            finally:
+                self._queue.task_done()
+
+    def _next_rand(self) -> float:
+        # xorshift — deterministic failure injection without global RNG.
+        with self._rate_lock:
+            x = self._rng_state & 0xFFFFFFFF
+            x ^= (x << 13) & 0xFFFFFFFF
+            x ^= x >> 17
+            x ^= (x << 5) & 0xFFFFFFFF
+            self._rng_state = x
+            return x / 0xFFFFFFFF
+
+    def _respect_rate_limit(self) -> None:
+        if self.invoke_rate_limit is None:
+            return
+        min_gap = 1.0 / self.invoke_rate_limit
+        with self._rate_lock:
+            now = time.monotonic()
+            wait = self._last_invoke + min_gap - now
+            self._last_invoke = max(now, self._last_invoke + min_gap)
+        if wait > 0:
+            time.sleep(wait)
+
+    def _run_one(self, task: Task, future: ElasticFuture, worker: str) -> None:
+        if future.state is TaskState.CANCELLED:
+            self.stats.on_start()
+            self.stats.on_finish(None, ok=False)
+            return
+        self._respect_rate_limit()
+        self.stats.on_start()
+        future._set_running()
+        task.start_time = time.monotonic()
+        task.worker = worker
+        task.attempts += 1
+        if self.invoke_overhead > 0:
+            time.sleep(self.invoke_overhead)
+        try:
+            if self.failure_rate > 0 and self._next_rand() < self.failure_rate:
+                raise RuntimeError(f"injected worker failure on {worker}")
+            result = task.run()
+        except BaseException as exc:  # noqa: BLE001 — report any failure
+            task.end_time = time.monotonic()
+            if task.attempts < self.max_attempts:
+                # stateless ⇒ safe to re-invoke (paper §3.3)
+                self.stats.on_retry()
+                self.stats.on_finish(None, ok=False)
+                self._queue.put((task, future))
+                return
+            self.stats.on_finish(self._record(task, worker), ok=False)
+            future._set_exception(exc)
+            return
+        task.end_time = time.monotonic()
+        record = self._record(task, worker)
+        self.stats.on_finish(record, ok=True)
+        future._set_result(result)
+
+    def _record(self, task: Task, worker: str) -> TaskRecord:
+        return TaskRecord(
+            task_id=task.task_id,
+            worker=worker,
+            submit_time=task.submit_time,
+            start_time=task.start_time or 0.0,
+            end_time=task.end_time or 0.0,
+            cost_hint=task.cost_hint,
+            remote=self.remote,
+            attempts=task.attempts,
+        )
+
+    # -- public API (paper's ExecutorService surface) ----------------------
+    def submit(self, fn: Callable[..., Any], *args: Any,
+               cost_hint: float = 1.0, **kwargs: Any) -> ElasticFuture:
+        if fn is None:
+            raise TypeError("task must not be None")  # Listing 1 line 8
+        if self._shutdown:
+            raise RuntimeError("executor has been shut down")
+        if (self.throttle_mode == "reject"
+                and self._queue.qsize() + self.stats.active >= self.max_concurrency):
+            raise FunctionThrottledError(
+                f"{self.name}: concurrency limit {self.max_concurrency} reached")
+        self._ensure_workers()
+        task = Task(fn=fn, args=args, kwargs=kwargs, cost_hint=cost_hint)
+        future = ElasticFuture(task)
+        self.stats.on_submit()
+        self._queue.put((task, future))
+        return future
+
+    def map(self, fn: Callable[[Any], Any], items: Sequence[Any]) -> List[Any]:
+        futures = [self.submit(fn, item) for item in items]
+        return [f.result() for f in futures]
+
+    def pending(self) -> int:
+        return self._queue.qsize()
+
+    def idle_capacity(self) -> int:
+        """Free worker slots right now (used by HybridExecutor's policy)."""
+        return max(0, self.max_concurrency - self.stats.active - self._queue.qsize())
+
+    def shutdown(self, wait: bool = True) -> None:
+        if self._shutdown:
+            return
+        self._shutdown = True
+        if wait and self._started:
+            self._queue.join()
+        if self._started:
+            for _ in self._workers:
+                self._queue.put(None)
+
+    def __enter__(self) -> "BaseExecutor":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.shutdown()
+
+
+class LocalExecutor(BaseExecutor):
+    """The paper's local thread pool: ~18 us submit overhead, bounded by
+    host cores (or an explicit limit)."""
+
+    kind = "local"
+    remote = False
+
+    def __init__(self, max_concurrency: int = 8, **kw: Any) -> None:
+        kw.setdefault("invoke_overhead", 18e-6)
+        super().__init__(max_concurrency, **kw)
+
+
+class ElasticExecutor(BaseExecutor):
+    """The ServerlessExecutor analogue: elastic stateless worker pool.
+
+    Defaults model AWS Lambda as measured in the paper (Table 4):
+    ~13 ms invocation overhead, 1 000 default concurrency (2 000 in the
+    paper's region), 10 000 invocations/s rate limit.
+    """
+
+    kind = "elastic"
+    remote = True
+
+    def __init__(
+        self,
+        max_concurrency: int = 1000,
+        *,
+        invoke_overhead: float = 13e-3,
+        invoke_rate_limit: Optional[float] = 10_000.0,
+        **kw: Any,
+    ) -> None:
+        super().__init__(
+            max_concurrency,
+            invoke_overhead=invoke_overhead,
+            invoke_rate_limit=invoke_rate_limit,
+            **kw,
+        )
+
+
+def as_completed(futures: Iterable[ElasticFuture],
+                 timeout: Optional[float] = None) -> Iterator[ElasticFuture]:
+    """Yield futures as they complete (master-side result queue drain)."""
+    pending = collections.deque(futures)
+    deadline = None if timeout is None else time.monotonic() + timeout
+    while pending:
+        progressed = False
+        for _ in range(len(pending)):
+            f = pending.popleft()
+            if f.done():
+                progressed = True
+                yield f
+            else:
+                pending.append(f)
+        if not progressed:
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(f"{len(pending)} futures still pending")
+            time.sleep(1e-4)

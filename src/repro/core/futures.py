@@ -1,0 +1,144 @@
+"""Future / task primitives for the elastic executor middleware.
+
+Mirrors the paper's use of the Java concurrency library: tasks are
+``Callable``-style zero-argument closures submitted to an executor which
+returns a ``Future``.  Tasks are *stateless* (paper §3.3 Limitation #2):
+all data in via the closure's bound arguments, all data out via the return
+value.  This matches functional JAX perfectly — a jitted function plus its
+operands is a serializable, idempotent unit of work, which is what makes
+straggler re-dispatch and fault re-execution safe.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Optional
+
+_task_counter = itertools.count()
+
+
+class TaskState(Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+
+class ElasticFuture:
+    """Result handle for a submitted task (paper's ``Future<T>``)."""
+
+    def __init__(self, task: "Task"):
+        self._task = task
+        self._event = threading.Event()
+        self._result: Any = None
+        self._exc: Optional[BaseException] = None
+        self._state = TaskState.PENDING
+        self._lock = threading.Lock()
+
+    # -- executor-side -------------------------------------------------
+    def _set_running(self) -> None:
+        with self._lock:
+            if self._state is TaskState.PENDING:
+                self._state = TaskState.RUNNING
+
+    def _set_result(self, value: Any) -> None:
+        with self._lock:
+            if self._state in (TaskState.DONE, TaskState.CANCELLED):
+                return  # first completion wins (speculative duplicates)
+            self._result = value
+            self._state = TaskState.DONE
+        self._event.set()
+
+    def _set_exception(self, exc: BaseException) -> None:
+        with self._lock:
+            if self._state in (TaskState.DONE, TaskState.CANCELLED):
+                return
+            self._exc = exc
+            self._state = TaskState.FAILED
+        self._event.set()
+
+    # -- client-side ----------------------------------------------------
+    def cancel(self) -> bool:
+        with self._lock:
+            if self._state is TaskState.PENDING:
+                self._state = TaskState.CANCELLED
+                self._event.set()
+                return True
+            return False
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"task {self._task.task_id} not done within {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        if self._state is TaskState.CANCELLED:
+            raise RuntimeError(f"task {self._task.task_id} was cancelled")
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        self._event.wait(timeout)
+        return self._exc
+
+    @property
+    def state(self) -> TaskState:
+        return self._state
+
+
+@dataclass
+class Task:
+    """A stateless unit of work: ``fn(*args, **kwargs) -> result``.
+
+    ``cost_hint`` lets callers pass an a-priori work estimate (e.g. UTS bag
+    size) used by the characterization module and the adaptive controller.
+    """
+
+    fn: Callable[..., Any]
+    args: tuple = ()
+    kwargs: dict = field(default_factory=dict)
+    cost_hint: float = 1.0
+    task_id: int = field(default_factory=lambda: next(_task_counter))
+    submit_time: float = field(default_factory=time.monotonic)
+    # Filled in by the executor:
+    start_time: Optional[float] = None
+    end_time: Optional[float] = None
+    worker: Optional[str] = None
+    attempts: int = 0
+
+    def run(self) -> Any:
+        return self.fn(*self.args, **self.kwargs)
+
+    @property
+    def duration(self) -> Optional[float]:
+        if self.start_time is None or self.end_time is None:
+            return None
+        return self.end_time - self.start_time
+
+
+@dataclass
+class TaskRecord:
+    """Immutable completion record for characterization & cost accounting."""
+
+    task_id: int
+    worker: str
+    submit_time: float
+    start_time: float
+    end_time: float
+    cost_hint: float
+    remote: bool
+    attempts: int = 1
+
+    @property
+    def duration(self) -> float:
+        return self.end_time - self.start_time
+
+    @property
+    def queue_delay(self) -> float:
+        return self.start_time - self.submit_time

@@ -1,0 +1,134 @@
+"""Hybrid executor (paper §3.2, Listing 1).
+
+Combines a local pool (the donor VM / host slice: constant, low cost) with
+the elastic pool (serverless analogue: instant vertical scaling).  The
+scheduling policy is the paper's naive-but-effective rule, verbatim:
+
+    if isLocalExecutorIdle():   run locally
+    else:                       run as an elastic (remote) task
+
+Transparency: callers submit to the HybridExecutor exactly as to any other
+executor; placement is invisible (Coulouris's *scaling transparency*).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, List, Optional
+
+from .executor import BaseExecutor, ElasticExecutor, LocalExecutor
+from .futures import ElasticFuture
+
+__all__ = ["HybridExecutor"]
+
+
+class HybridExecutor:
+    """Paper's ``ServerlessHybridExecutorService`` (Listing 1)."""
+
+    kind = "hybrid"
+
+    def __init__(
+        self,
+        local: Optional[LocalExecutor] = None,
+        elastic: Optional[ElasticExecutor] = None,
+        *,
+        local_concurrency: int = 8,
+        elastic_concurrency: int = 1000,
+        policy: Optional[Callable[["HybridExecutor"], bool]] = None,
+    ) -> None:
+        self.local = local or LocalExecutor(local_concurrency)
+        self.elastic = elastic or ElasticExecutor(elastic_concurrency)
+        # policy(hybrid) -> True to run locally. Default = paper's rule.
+        self._policy = policy or (lambda h: h.local.idle_capacity() > 0)
+        self._lock = threading.Lock()
+        self._submitted: List[ElasticFuture] = []
+
+    # -- the paper's submit(), lines 7-27 of Listing 1 ---------------------
+    def submit(self, fn: Callable[..., Any], *args: Any,
+               cost_hint: float = 1.0, **kwargs: Any) -> ElasticFuture:
+        if fn is None:
+            raise TypeError("task must not be None")
+        with self._lock:  # placement decision must see a consistent view
+            run_local = self._policy(self)
+            pool: BaseExecutor = self.local if run_local else self.elastic
+            f = pool.submit(fn, *args, cost_hint=cost_hint, **kwargs)
+            self._submitted.append(f)
+            return f
+
+    def map(self, fn: Callable[[Any], Any], items) -> List[Any]:
+        futures = [self.submit(fn, item) for item in items]
+        return [f.result() for f in futures]
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def stats(self) -> "_CombinedStats":
+        return _CombinedStats(self.local.stats, self.elastic.stats)
+
+    @property
+    def records(self):
+        return self.local.stats.records + self.elastic.stats.records
+
+    def placement_counts(self) -> dict:
+        return {
+            "local": self.local.stats.submitted,
+            "elastic": self.elastic.stats.submitted,
+        }
+
+    def idle_capacity(self) -> int:
+        return self.local.idle_capacity() + self.elastic.idle_capacity()
+
+    def pending(self) -> int:
+        return self.local.pending() + self.elastic.pending()
+
+    def shutdown(self, wait: bool = True) -> None:
+        self.local.shutdown(wait=wait)
+        self.elastic.shutdown(wait=wait)
+
+    def __enter__(self) -> "HybridExecutor":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.shutdown()
+
+
+class _CombinedStats:
+    """Aggregate stats view over the local + elastic pools."""
+
+    def __init__(self, a, b):
+        self._a, self._b = a, b
+
+    @property
+    def submitted(self):
+        return self._a.submitted + self._b.submitted
+
+    @property
+    def completed(self):
+        return self._a.completed + self._b.completed
+
+    @property
+    def failed(self):
+        return self._a.failed + self._b.failed
+
+    @property
+    def active(self):
+        return self._a.active + self._b.active
+
+    @property
+    def invocations(self):
+        return self._a.invocations + self._b.invocations
+
+    @property
+    def peak_concurrency(self):
+        # upper bound: pools peak independently
+        return self._a.peak_concurrency + self._b.peak_concurrency
+
+    @property
+    def records(self):
+        return self._a.records + self._b.records
+
+    def snapshot(self) -> dict:
+        return {
+            "submitted": self.submitted, "completed": self.completed,
+            "failed": self.failed, "active": self.active,
+            "invocations": self.invocations,
+            "peak_concurrency": self.peak_concurrency,
+        }

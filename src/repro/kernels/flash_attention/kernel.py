@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: fused flash attention (forward).
+
+The §Perf loop showed the pure-XLA flash path is memory-bound on every
+train/prefill cell: each (q, kv) block's score/probability tensors
+materialize to HBM (~3 f32 [q_chunk, kv_chunk] buffers per block per
+head) because XLA cannot keep them alive in VMEM across the two MXU
+dots.  This kernel is the fix the analysis asks for: scores, softmax
+stats and probabilities live entirely in VMEM scratch; HBM traffic
+reduces to Q/K/V reads + O writes.
+
+Grid: (BHG, nq, nk) — nk is the innermost (sequential) dimension, so
+the online-softmax state for one q block is carried in VMEM scratch
+across kv steps and flushed to the output on the last one.  Dead blocks
+(above the causal diagonal / outside the sliding window) are skipped
+with pl.when — the same triangular schedule as the XLA path, enforced
+in-kernel.
+
+Layouts: q/o [BHG, Sq, D*]; k/v [BHkv, Skv, D*]; the index maps fold
+GQA by pointing G query groups at one shared KV head.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                      *, causal: bool, window: Optional[int],
+                      q_chunk: int, kv_chunk: int, nk: int, sq: int,
+                      skv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q_lo = qi * q_chunk
+    k_lo = ki * kv_chunk
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_lo + q_chunk - 1
+    if window is not None:
+        live &= k_lo + kv_chunk - 1 > q_lo - window
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)             # [qc, Dk] (scaled)
+        k = k_ref[0].astype(jnp.float32)             # [kc, Dk]
+        v = v_ref[0]                                 # [kc, Dv]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)      # [qc, kc]
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                (q_chunk, kv_chunk), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                (q_chunk, kv_chunk), 1)
+        mask = (q_pos < sq) & (k_pos < skv)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: Optional[int] = None,
+    q_chunk: int = 512, kv_chunk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [BHG, Sq, Dk] (pre-scaled); k: [BHkv, Skv, Dk];
+    v: [BHkv, Skv, Dv]; BHG = BHkv * G.  Returns [BHG, Sq, Dv]."""
+    bhg, sq, dk = q.shape
+    bhkv, skv, dv = v.shape
+    g = bhg // bhkv
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq = -(-sq // q_chunk)
+    nk = -(-skv // kv_chunk)
+    sq_pad, skv_pad = nq * q_chunk, nk * kv_chunk
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0)))
+    if skv_pad != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, causal=causal, window=window,
+        q_chunk=q_chunk, kv_chunk=kv_chunk, nk=nk, sq=sq, skv=skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bhg, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_chunk, dk), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, kv_chunk, dk),
+                         lambda b, qi, ki, g=g: (b // g, ki, 0)),
+            pl.BlockSpec((1, kv_chunk, dv),
+                         lambda b, qi, ki, g=g: (b // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_chunk, dv),
+                               lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhg, sq_pad, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_chunk,), jnp.float32),
+            pltpu.VMEM((q_chunk,), jnp.float32),
+            pltpu.VMEM((q_chunk, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

@@ -1,0 +1,60 @@
+"""Jit'd wrapper: model-layout flash attention on the Pallas kernel.
+
+Takes the model layer's [B, S, Hkv, G, D*] layout, flattens to the
+kernel's [BHG, S, D*] batch-of-heads layout, and dispatches to:
+  - the fused Mosaic kernel on TPU,
+  - the Pallas interpreter for correctness tests,
+  - the jnp oracle elsewhere.
+The model's default train path stays on the pure-XLA triangular flash
+(models.attention.flash_attention) because this container cannot compile
+Mosaic; on a TPU deployment this wrapper替换s it 1:1 (same signature).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd_pallas
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention_fused", "flash_attention_ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "q_chunk", "kv_chunk",
+                                             "backend"))
+def _dispatch(q2, k2, v2, *, causal, window, q_chunk, kv_chunk, backend):
+    if backend == "ref":
+        return flash_attention_ref(q2, k2, v2, causal=causal,
+                                   window=window)
+    return flash_attention_fwd_pallas(
+        q2, k2, v2, causal=causal, window=window, q_chunk=q_chunk,
+        kv_chunk=kv_chunk, interpret=(backend == "interpret"))
+
+
+def flash_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool = True,
+                          window: Optional[int] = None,
+                          q_chunk: int = 512, kv_chunk: int = 512,
+                          backend: Optional[str] = None) -> jax.Array:
+    """q: [B, Sq, Hkv, G, Dk] (pre-scaled); k/v: [B, Skv, Hkv, D*].
+    Returns [B, Sq, Hkv, G, Dv]."""
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "ref"
+    b, sq, hkv, g, dk = q.shape
+    skv = k.shape[1]
+    dv = v.shape[-1]
+    q2 = jnp.moveaxis(q, 1, 3).reshape(b * hkv * g, sq, dk)
+    k2 = jnp.moveaxis(k, 1, 2).reshape(b * hkv, skv, dk)
+    v2 = jnp.moveaxis(v, 1, 2).reshape(b * hkv, skv, dv)
+    out = _dispatch(q2, k2, v2, causal=causal, window=window,
+                    q_chunk=q_chunk, kv_chunk=kv_chunk, backend=backend)
+    out = out.reshape(b, hkv, g, sq, dv)
+    return jnp.moveaxis(out, 3, 1)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused flash-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref"]
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """Direct softmax attention. q: [BHG, Sq, Dk] (pre-scaled);
+    k: [BHkv, Skv, Dk]; v: [BHkv, Skv, Dv]."""
+    bhg, sq, _ = q.shape
+    bhkv, skv, dv = v.shape
+    g = bhg // bhkv
+    kx = jnp.repeat(k, g, axis=0)
+    vx = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32))
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(vx.dtype),
+                      vx).astype(q.dtype)

@@ -1,0 +1,69 @@
+"""Jit'd public wrapper for the Mandelbrot escape-time kernel.
+
+Handles padding to block alignment, backend selection (interpret=True on
+CPU so the kernel body runs under the Pallas interpreter; compiled Mosaic
+path on TPU), and a convenience entry point that takes a rectangle of the
+complex plane instead of precomputed coordinate arrays.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK, mandelbrot_pallas
+from .ref import coords, mandelbrot_ref
+
+__all__ = ["mandelbrot", "mandelbrot_rect", "mandelbrot_ref", "coords"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _bucket(n: int, floor: int = 8) -> int:
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter", "block", "backend"))
+def _mandelbrot_padded(c_re, c_im, *, max_iter: int, block, backend: str):
+    if backend == "ref":
+        return mandelbrot_ref(c_re, c_im, max_iter)
+    return mandelbrot_pallas(c_re, c_im, max_iter, block=block,
+                             interpret=(backend == "interpret"))
+
+
+def mandelbrot(c_re: jax.Array, c_im: jax.Array, max_iter: int, *,
+               block: tuple = DEFAULT_BLOCK,
+               backend: str | None = None) -> jax.Array:
+    """Dwell map for arbitrary-shaped coordinate arrays (auto-padded).
+
+    backend: "pallas" (compiled Mosaic, TPU), "interpret" (Pallas
+    interpreter, used by kernel tests), "ref" (pure-jnp fast path on CPU),
+    None = auto.  Shapes are bucket-padded to powers of two so repeated
+    irregular rectangle sizes (Mariani-Silver) hit a bounded set of
+    compilations; pad points are outside the escape radius so they cost
+    one iteration.
+    """
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "ref"
+    h, w = c_re.shape
+    hb, wb = _bucket(h), _bucket(w)
+    c_re_p = jnp.pad(c_re, ((0, hb - h), (0, wb - w)), constant_values=3.0)
+    c_im_p = jnp.pad(c_im, ((0, hb - h), (0, wb - w)), constant_values=3.0)
+    block = (min(block[0], hb), min(block[1], wb))
+    out = _mandelbrot_padded(c_re_p, c_im_p, max_iter=max_iter,
+                             block=block, backend=backend)
+    return out[:h, :w]
+
+
+def mandelbrot_rect(x0: float, y0: float, x1: float, y1: float,
+                    height: int, width: int, max_iter: int,
+                    **kw) -> jax.Array:
+    """Evaluate a rectangle of the plane (the Mariani-Silver task body)."""
+    c_re, c_im = coords(x0, y0, x1, y1, height, width)
+    return mandelbrot(c_re, c_im, max_iter, **kw)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the Mandelbrot escape-time kernel.
+
+The Mariani-Silver algorithm's leaf compute (paper §4.1.2): for each point
+c of the plane, iterate z <- z^2 + c from z=0 and record the first
+iteration ("dwell") at which |z| > 2, clamped at ``max_iter``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mandelbrot_ref", "coords"]
+
+ESCAPE_RADIUS_SQ = 4.0
+
+
+def mandelbrot_ref(c_re: jax.Array, c_im: jax.Array, max_iter: int) -> jax.Array:
+    """Dwell map, int32, same shape as ``c_re``/``c_im``."""
+    c_re = c_re.astype(jnp.float32)
+    c_im = c_im.astype(jnp.float32)
+
+    def body(_, carry):
+        z_re, z_im, dwell = carry
+        active = z_re * z_re + z_im * z_im <= ESCAPE_RADIUS_SQ
+        new_re = z_re * z_re - z_im * z_im + c_re
+        new_im = 2.0 * z_re * z_im + c_im
+        z_re = jnp.where(active, new_re, z_re)
+        z_im = jnp.where(active, new_im, z_im)
+        dwell = dwell + active.astype(jnp.int32)
+        return z_re, z_im, dwell
+
+    z0 = jnp.zeros_like(c_re)
+    dwell0 = jnp.zeros(c_re.shape, jnp.int32)
+    _, _, dwell = jax.lax.fori_loop(0, max_iter, body, (z0, z0, dwell0))
+    return dwell
+
+
+def coords(x0: float, y0: float, x1: float, y1: float,
+           height: int, width: int) -> tuple:
+    """Pixel-center coordinates of a rectangle of the complex plane."""
+    xs = jnp.linspace(x0, x1, width, dtype=jnp.float32)
+    ys = jnp.linspace(y0, y1, height, dtype=jnp.float32)
+    c_im, c_re = jnp.meshgrid(ys, xs, indexing="ij")
+    return c_re, c_im

@@ -1,0 +1,77 @@
+"""Numpy fast path for UTS node expansion on the host.
+
+The algorithm layer (the executor *task bodies*) runs on whatever machine
+hosts the worker — on a pod that is the TPU (Pallas kernel); in this
+container it is a single CPU core, where vectorized numpy beats the XLA
+CPU emulation of the kernel by ~2 orders of magnitude.  Bit-identical to
+ref.py / kernel.py (asserted in the test suite), so backends are
+interchangeable.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+__all__ = ["uts_child_digests_np", "geometric_children_np"]
+
+_H0 = (0x67452301, 0xEFCDAB89, 0x98BADCFE, 0x10325476, 0xC3D2E1F0)
+_K = (0x5A827999, 0x6ED9EBA1, 0x8F1BBCDC, 0xCA62C1D6)
+
+
+def _rotl(x: np.ndarray, n: int) -> np.ndarray:
+    n = n % 32
+    return (x << np.uint32(n)) | (x >> np.uint32(32 - n))
+
+
+def uts_child_digests_np(parent: np.ndarray, child_ix: np.ndarray) -> np.ndarray:
+    """SHA1(parent || be32(ix)): [5, N] uint32 x [N] uint32 -> [5, N]."""
+    old = np.seterr(over="ignore")  # uint32 wraparound is the semantics
+    try:
+        parent = parent.astype(np.uint32, copy=False)
+        n = parent.shape[1]
+        zero = np.zeros(n, np.uint32)
+        w = [parent[i] for i in range(5)]
+        w.append(child_ix.astype(np.uint32, copy=False))
+        w.append(np.full(n, 0x80000000, np.uint32))
+        w.extend([zero] * 8)
+        w.append(np.full(n, 24 * 8, np.uint32))
+        for i in range(16, 80):
+            w.append(_rotl(w[i - 3] ^ w[i - 8] ^ w[i - 14] ^ w[i - 16], 1))
+        a, b, c, d, e = (np.full(n, h, np.uint32) for h in _H0)
+        for i in range(80):
+            if i < 20:
+                f = (b & c) | (~b & d)
+                k = _K[0]
+            elif i < 40:
+                f = b ^ c ^ d
+                k = _K[1]
+            elif i < 60:
+                f = (b & c) | (b & d) | (c & d)
+                k = _K[2]
+            else:
+                f = b ^ c ^ d
+                k = _K[3]
+            tmp = _rotl(a, 5) + f + e + np.uint32(k) + w[i]
+            e, d, c, b, a = d, c, _rotl(b, 30), a, tmp
+        return np.stack([
+            a + np.uint32(_H0[0]),
+            b + np.uint32(_H0[1]),
+            c + np.uint32(_H0[2]),
+            d + np.uint32(_H0[3]),
+            e + np.uint32(_H0[4]),
+        ])
+    finally:
+        np.seterr(**old)
+
+
+def geometric_children_np(digest: np.ndarray, depth: np.ndarray, *,
+                          b0: float = 4.0, max_depth: int = 18,
+                          max_children: int = 64) -> np.ndarray:
+    """Numpy twin of ops.geometric_children (same u31 -> Geometric map)."""
+    u31 = (digest[0] >> np.uint32(1)).astype(np.int64).astype(np.float32)
+    u = (u31 + 1.0) / (2147483648.0 + 1.0)
+    p = 1.0 / (1.0 + b0)
+    m = np.floor(np.log(u) / math.log(1.0 - p)).astype(np.int32)
+    m = np.clip(m, 0, max_children)
+    return np.where(depth >= max_depth, 0, m).astype(np.int32)

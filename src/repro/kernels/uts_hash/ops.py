@@ -1,0 +1,105 @@
+"""Jit'd public wrapper for the UTS SHA-1 kernel + tree-shape helpers.
+
+Besides the padded kernel dispatch, this module owns the *semantics* the
+algorithm layer needs from a digest:
+
+* ``uts_child_digests``   — kernel (or oracle) dispatch with padding;
+* ``random_u31``          — canonical UTS extracts a 31-bit uniform from
+                            the first digest word;
+* ``geometric_children``  — number of children: Geometric(mean b0) with a
+                            depth cutoff (paper: b0=4, d in 14..18).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_N, uts_hash_pallas
+from .ref import uts_child_digests_ref
+
+__all__ = [
+    "uts_child_digests", "uts_child_digests_ref",
+    "root_digest", "random_u31", "geometric_children",
+]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _bucket(n: int, floor: int = 128) -> int:
+    """Next power-of-two >= max(floor, n): bounds jit recompilations when
+    the frontier size changes every generation (irregular by nature)."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "backend"))
+def _hash_padded(parent, child_ix, *, block_n: int, backend: str):
+    if backend == "ref":
+        return uts_child_digests_ref(parent, child_ix)
+    return uts_hash_pallas(parent, child_ix.reshape(-1), block_n=block_n,
+                           interpret=(backend == "interpret"))
+
+
+def uts_child_digests(parent: jax.Array, child_ix: jax.Array, *,
+                      block_n: int = DEFAULT_BLOCK_N,
+                      backend: str | None = None) -> jax.Array:
+    """SHA1(parent || be32(ix)) for [5, N] parents, [N] indices.
+
+    backend: "pallas" (compiled Mosaic, TPU), "interpret" (Pallas
+    interpreter — used by the kernel test sweeps), "ref" (pure-jnp oracle
+    — the fast path on CPU, bit-identical by test), or None = auto.
+    """
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "ref"
+    n = parent.shape[1]
+    if n == 0:
+        return jnp.zeros((5, 0), jnp.uint32)
+    nb = _bucket(n)
+    parent_p = jnp.pad(parent, ((0, 0), (0, nb - n)))
+    child_p = jnp.pad(child_ix, (0, nb - n))
+    bn = min(block_n, nb)
+    out = _hash_padded(parent_p, child_p, block_n=bn, backend=backend)
+    return out[:, :n]
+
+
+def root_digest(seed: int) -> jax.Array:
+    """Root node state: SHA1(zero_digest || be32(seed)) — [5, 1] uint32.
+
+    Canonical UTS seeds the root by hashing the seed into a zero state.
+    """
+    zero = jnp.zeros((5, 1), jnp.uint32)
+    ix = jnp.array([seed], jnp.uint32)
+    return uts_child_digests_ref(zero, ix)
+
+
+def random_u31(digest: jax.Array) -> jax.Array:
+    """31-bit uniform integer from a [5, N] digest batch -> [N] int32."""
+    return (digest[0] >> 1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("b0", "max_depth",
+                                              "max_children"))
+def geometric_children(digest: jax.Array, depth: jax.Array, *,
+                       b0: float = 4.0, max_depth: int = 18,
+                       max_children: int = 64) -> jax.Array:
+    """Number of children per node, Geometric(mean=b0), 0 past cutoff.
+
+    m = floor(log(u) / log(1 - p)) with p = 1/(1+b0) gives a geometric
+    variable on {0,1,...} with mean b0 (the UTS GEO shape function).
+    ``max_children`` clamps the tail so frontier buffers stay bounded
+    (P(m > 64) ~ (4/5)^64 ~ 6e-7 at b0=4).
+    """
+    u31 = random_u31(digest).astype(jnp.float32)
+    # map to open interval (0, 1): (r + 1) / (2^31 + 1)
+    u = (u31 + 1.0) / (2147483648.0 + 1.0)
+    p = 1.0 / (1.0 + b0)
+    m = jnp.floor(jnp.log(u) / math.log(1.0 - p)).astype(jnp.int32)
+    m = jnp.clip(m, 0, max_children)
+    return jnp.where(depth >= max_depth, 0, m)

@@ -1,0 +1,103 @@
+"""Pure-jnp oracle: vectorized SHA-1 child-digest generation for UTS.
+
+UTS (paper §4.1.1, Prins et al. 2003) generates the tree from SHA-1: a
+node's state is a 20-byte digest; child ``i`` of a node is
+``SHA1(parent_digest || uint32_be(i))``.  The 24-byte message fits one
+64-byte SHA-1 block after padding, so the whole construction is a single
+80-round compression — ideal for lane-wise vectorization over a batch of
+(parent, child_index) pairs.
+
+Layout: digests are [5, N] uint32 (word-major, node-minor) so the node
+axis is the TPU lane axis; see kernel.py.
+
+``sha1_words`` is additionally validated against ``hashlib.sha1`` in the
+test suite, making this a ground-truth oracle rather than a sibling
+implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sha1_words", "uts_child_digests_ref"]
+
+_H0 = (0x67452301, 0xEFCDAB89, 0x98BADCFE, 0x10325476, 0xC3D2E1F0)
+_K = (0x5A827999, 0x6ED9EBA1, 0x8F1BBCDC, 0xCA62C1D6)
+
+
+def _rotl(x: jax.Array, n: int) -> jax.Array:
+    n = n % 32
+    return (x << n) | (x >> (32 - n))
+
+
+def sha1_words(words16) -> list:
+    """One SHA-1 compression over a 16-word block.
+
+    ``words16``: list of 16 uint32 arrays (any common shape) — the padded
+    message block, big-endian word order.  Returns 5 uint32 arrays.
+
+    Implementation note: the 80 rounds run as a ``fori_loop`` over a
+    rolling 16-word window rather than a static unroll.  A full unroll is
+    what the Pallas kernel does (one fused Mosaic kernel), but under XLA
+    fusion the message-schedule recurrence w[i]=f(w[i-3],w[i-8],...) gets
+    *recomputed into every consumer*, blowing the work up exponentially —
+    the loop forces materialization once per round.
+    """
+    w0 = jnp.stack(list(words16))            # [16, ...]
+    shape = w0.shape[1:]
+
+    def full(v):
+        return jnp.full(shape, v, jnp.uint32)
+
+    def round_fn(i, carry):
+        a, b, c, d, e, win = carry
+        idx = i % 16
+        # For i >= 16, win[idx] still holds w[i-16]; compute the schedule.
+        w_new = _rotl(win[(i - 3) % 16] ^ win[(i - 8) % 16]
+                      ^ win[(i - 14) % 16] ^ win[idx], 1)
+        w_i = jnp.where(i >= 16, w_new, win[idx])
+        win = jax.lax.dynamic_update_index_in_dim(win, w_i, idx, 0)
+        f_ch = (b & c) | (jnp.bitwise_not(b) & d)
+        f_par = b ^ c ^ d
+        f_maj = (b & c) | (b & d) | (c & d)
+        f = jnp.where(i < 20, f_ch, jnp.where(i < 40, f_par,
+                      jnp.where(i < 60, f_maj, f_par)))
+        k = jnp.where(i < 20, jnp.uint32(_K[0]),
+                      jnp.where(i < 40, jnp.uint32(_K[1]),
+                                jnp.where(i < 60, jnp.uint32(_K[2]),
+                                          jnp.uint32(_K[3]))))
+        tmp = _rotl(a, 5) + f + e + k + w_i
+        return tmp, a, _rotl(b, 30), c, d, win
+
+    init = (full(_H0[0]), full(_H0[1]), full(_H0[2]), full(_H0[3]),
+            full(_H0[4]), w0)
+    a, b, c, d, e, _ = jax.lax.fori_loop(0, 80, round_fn, init)
+    return [
+        a + jnp.uint32(_H0[0]),
+        b + jnp.uint32(_H0[1]),
+        c + jnp.uint32(_H0[2]),
+        d + jnp.uint32(_H0[3]),
+        e + jnp.uint32(_H0[4]),
+    ]
+
+
+def uts_child_digests_ref(parent: jax.Array, child_ix: jax.Array) -> jax.Array:
+    """SHA1(parent_digest || be32(child_ix)) for a batch of nodes.
+
+    parent:   [5, N] uint32 — parent digests (word-major)
+    child_ix: [N]    uint32 — child index within the parent
+    returns   [5, N] uint32 — child digests
+    """
+    parent = parent.astype(jnp.uint32)
+    child_ix = child_ix.astype(jnp.uint32)
+    n = parent.shape[1]
+    zero = jnp.zeros((n,), jnp.uint32)
+    # 24-byte message -> one padded block:
+    #   w0..w4 = parent words, w5 = child index, w6 = 0x80000000 (pad bit),
+    #   w7..w14 = 0, w15 = 192 (bit length of the message).
+    words = [parent[i] for i in range(5)]
+    words.append(child_ix)
+    words.append(jnp.full((n,), 0x80000000, jnp.uint32))
+    words.extend([zero] * 8)
+    words.append(jnp.full((n,), 24 * 8, jnp.uint32))
+    return jnp.stack(sha1_words(words))

@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ These two lines MUST precede any other import (jax locks the device
+#   count on first init); do not move them.  Smoke tests and benches
+#   never import this module — they see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, under --out:
+    <arch>/<shape>/<mesh>.json       memory_analysis + cost_analysis +
+                                     collective summary + timings
+    <arch>/<shape>/<mesh>.hlo.gz     optimized post-SPMD HLO text
+                                     (input to the roofline analyzer)
+
+Usage:
+    python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--both-meshes]
+"""
+import argparse
+import gzip
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS, SHAPES, cell_applicable, get_config
+from .mesh import make_production_mesh
+from .steps import plan_cell
+
+__all__ = ["run_cell", "main"]
+
+
+# TPU v5e constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+
+def _analyze(hlo: str) -> dict:
+    """Trip-count-corrected per-device cost + roofline terms."""
+    from ..benchlib.hlo_analysis import analyze_hlo
+    cost = analyze_hlo(hlo)
+    compute_s = cost.flops / PEAK_FLOPS
+    memory_s = cost.bytes / HBM_BW
+    coll_s = cost.link_bytes / LINK_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_device": cost.flops,
+        "bytes_per_device": cost.bytes,
+        "transcendentals": cost.transcendentals,
+        "link_bytes": cost.link_bytes,
+        "by_kind": dict(cost.collectives),
+        "counts": dict(cost.collective_counts),
+        "while_trips": cost.while_trips[:32],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "results/dryrun",
+             save_hlo: bool = True, fsdp: bool = True,
+             remat: str = "full", flags: str = "") -> dict:
+    from ..models.flags import reset_flags, set_flags
+    reset_flags()
+    if flags:
+        set_flags(**dict(kv.split("=") for kv in flags.split(",")))
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod512" if multi_pod else "pod256"
+    cell_dir = os.path.join(out_dir, arch, shape_name)
+    os.makedirs(cell_dir, exist_ok=True)
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "devices": 512 if multi_pod else 256,
+        "applicable": cell_applicable(cfg, shape),
+    }
+    if not rec["applicable"]:
+        rec["status"] = "skipped"
+        rec["reason"] = ("long_500k requires sub-quadratic attention; "
+                         f"{arch} is pure full-attention (DESIGN.md §4)")
+        _write(cell_dir, mesh_name, rec)
+        return rec
+
+    t0 = time.monotonic()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        plan = plan_cell(cfg, shape, mesh, fsdp=fsdp, remat=remat)
+        lowered = plan.lower()
+        rec["lower_s"] = round(time.monotonic() - t0, 2)
+        t1 = time.monotonic()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.monotonic() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+        print(f"[{arch}/{shape_name}/{mesh_name}] memory_analysis:",
+              rec["memory_analysis"], flush=True)
+        ca = compiled.cost_analysis()
+        rec["cost_analysis"] = {
+            k: float(v) for k, v in dict(ca or {}).items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "transcendentals",
+             "utilization operand 0 {}", "bytes accessed output {}")
+        }
+        print(f"[{arch}/{shape_name}/{mesh_name}] cost_analysis(raw):",
+              rec["cost_analysis"], flush=True)
+
+        hlo = compiled.as_text()
+        rec["hlo_bytes"] = len(hlo)
+        try:
+            rec["analysis"] = _analyze(hlo)
+            print(f"[{arch}/{shape_name}/{mesh_name}] roofline terms: "
+                  f"compute {rec['analysis']['compute_s']:.4f}s "
+                  f"memory {rec['analysis']['memory_s']:.4f}s "
+                  f"collective {rec['analysis']['collective_s']:.4f}s "
+                  f"-> {rec['analysis']['dominant']}-bound", flush=True)
+        except Exception as e:  # analysis is best-effort; HLO is saved
+            rec["analysis"] = {"error": str(e)}
+        rec["degraded_shardings"] = sorted(set(plan.policy.degraded))[:40]
+        if save_hlo:
+            with gzip.open(os.path.join(
+                    cell_dir, f"{mesh_name}.hlo.gz"), "wt") as f:
+                f.write(hlo)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure verbatim
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.monotonic() - t0, 2)
+    _write(cell_dir, mesh_name, rec)
+    status = rec["status"]
+    print(f"[{arch}/{shape_name}/{mesh_name}] {status} "
+          f"({rec['total_s']}s)", flush=True)
+    if status == "error":
+        print(rec["traceback"], flush=True)
+    return rec
+
+
+def _write(cell_dir: str, mesh_name: str, rec: dict) -> None:
+    slim = {k: v for k, v in rec.items() if k != "traceback"}
+    with open(os.path.join(cell_dir, f"{mesh_name}.json"), "w") as f:
+        json.dump(slim, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 (512 chips); default single-pod 16x16")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--flags", default="",
+                    help="perf flags, e.g. p_bf16=1,seq_shard_acts=1")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells whose JSON already says ok/skipped")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    n_ok = n_err = n_skip = 0
+    for a, s, m in cells:
+        mesh_name = "pod512" if m else "pod256"
+        jpath = os.path.join(args.out, a, s, f"{mesh_name}.json")
+        if args.skip_done and os.path.exists(jpath):
+            with open(jpath) as f:
+                prev = json.load(f)
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[{a}/{s}/{mesh_name}] cached "
+                      f"{prev['status']}", flush=True)
+                n_ok += prev["status"] == "ok"
+                n_skip += prev["status"] == "skipped"
+                continue
+        rec = run_cell(a, s, multi_pod=m, out_dir=args.out,
+                       save_hlo=not args.no_hlo,
+                       fsdp=not args.no_fsdp, flags=args.flags)
+        n_ok += rec["status"] == "ok"
+        n_err += rec["status"] == "error"
+        n_skip += rec["status"] == "skipped"
+    print(f"dry-run complete: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors", flush=True)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init.
+
+Topology: a TPU v5e pod is 16x16 = 256 chips; "data" x "model" maps DP
+onto one torus dimension and TP onto the other (TP stays intra-pod where
+ICI bandwidth lives).  Multi-pod adds an outer "pod" axis (2 pods = 512
+chips) — a pure data-parallel axis whose gradient all-reduce crosses
+DCI, which is why the int8 gradient-compression path targets it.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / laptop runs)."""
+    return jax.make_mesh((data, model), ("data", "model"))

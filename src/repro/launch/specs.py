@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run currency).
+
+``input_specs(cfg, shape)`` returns exactly what the corresponding step
+function is lowered against — weak-type-correct, shardable, and never
+allocated.  Modality-stub archs (musicgen, llava) receive precomputed
+frame/patch embeddings [B, S, d] instead of token ids (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import ShapeSpec
+from ..models import ModelConfig, init_cache, init_params
+
+__all__ = ["input_specs", "abstract_params", "abstract_cache",
+           "abstract_opt_state"]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs for one (arch x shape) cell as ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {}
+        if cfg.frontend is not None:
+            batch["embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = sds((b, s), jnp.int32)
+        batch["labels"] = sds((b, s), jnp.int32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.frontend is not None:
+            batch["embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = sds((b, s), jnp.int32)
+        return {"batch": batch}
+    if shape.kind == "decode":
+        batch = {}
+        if cfg.frontend is not None:
+            batch["embeds"] = sds((b, 1, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = sds((b, 1), jnp.int32)
+        return {"batch": batch, "pos": sds((b,), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(init_params, cfg), key)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_seq))
+
+
+def abstract_opt_state(param_shapes, opt_cfg):
+    from ..optim import init_opt_state
+    return jax.eval_shape(
+        functools.partial(init_opt_state, cfg=opt_cfg), param_shapes)

@@ -1,0 +1,121 @@
+"""Step builders: jit-wrapped train/prefill/serve steps with shardings.
+
+One cell = (arch config x shape x mesh).  ``plan_cell`` assembles the
+sharding plan (params / optimizer / batch / cache) from the rule engine
+and returns jit-wrapped step functions ready to ``.lower()`` against
+``input_specs`` — the currency of both the real launcher (train.py /
+serve.py) and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.shapes import ShapeSpec
+from ..models import ModelConfig, ShardCtx, decode_step, loss_fn, prefill
+from ..optim import AdamWConfig, adamw_update, init_opt_state
+from ..runtime.sharding import (ShardingPolicy, batch_specs, cache_specs,
+                                named, param_specs, prepare)
+from .specs import abstract_cache, abstract_opt_state, abstract_params, \
+    input_specs
+
+__all__ = ["CellPlan", "plan_cell"]
+
+
+@dataclass
+class CellPlan:
+    cfg: ModelConfig
+    shape: ShapeSpec
+    mesh: Mesh
+    policy: ShardingPolicy
+    ctx: ShardCtx
+    step: Any                      # jit-wrapped step fn
+    lower_args: Tuple              # ShapeDtypeStructs to .lower() with
+    shardings: Dict[str, Any]      # name -> sharding tree (for launchers)
+
+    def lower(self):
+        return self.step.lower(*self.lower_args)
+
+
+def _mk_policy(mesh: Mesh, *, fsdp: bool = True) -> ShardingPolicy:
+    multi = "pod" in mesh.axis_names
+    policy = ShardingPolicy(
+        tp_axis="model",
+        dp_axes=("pod", "data") if multi else ("data",),
+        fsdp_axis="data" if fsdp else None,
+    )
+    return prepare(policy, mesh)
+
+
+def plan_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
+              opt_cfg: Optional[AdamWConfig] = None,
+              remat: str = "full", fsdp: bool = True) -> CellPlan:
+    policy = _mk_policy(mesh, fsdp=fsdp)
+    ctx = ShardCtx(mesh=mesh, dp_axes=policy.dp_axes,
+                   tp_axis=policy.tp_axis)
+
+    pshapes = abstract_params(cfg)
+    pspecs = param_specs(pshapes, policy, cfg)
+    p_sh = named(mesh, pspecs)
+    ins = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        oshapes = abstract_opt_state(pshapes, opt_cfg)
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        o_sh = named(mesh, ospecs)
+        b_sh = named(mesh, batch_specs(ins["batch"], policy))
+
+        def train_step(params, opt_state, batch):
+            def lossf(p):
+                return loss_fn(cfg, p, batch, ctx=ctx, remat=remat)
+            (loss, metrics), grads = jax.value_and_grad(
+                lossf, has_aux=True)(params)
+            params, opt_state, om = adamw_update(params, grads, opt_state,
+                                                 opt_cfg)
+            return params, opt_state, {**metrics, **om, "loss": loss}
+
+        step = jax.jit(train_step,
+                       in_shardings=(p_sh, o_sh, b_sh),
+                       out_shardings=(p_sh, o_sh, None),
+                       donate_argnums=(0, 1))
+        return CellPlan(cfg, shape, mesh, policy, ctx, step,
+                        (pshapes, oshapes, ins["batch"]),
+                        {"params": p_sh, "opt": o_sh, "batch": b_sh})
+
+    if shape.kind == "prefill":
+        b_sh = named(mesh, batch_specs(ins["batch"], policy))
+        cshapes = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        c_sh = named(mesh, cache_specs(cshapes, policy))
+
+        def prefill_step(params, batch):
+            return prefill(cfg, params, batch, ctx=ctx)
+
+        step = jax.jit(prefill_step,
+                       in_shardings=(p_sh, b_sh),
+                       out_shardings=(None, c_sh))
+        return CellPlan(cfg, shape, mesh, policy, ctx, step,
+                        (pshapes, ins["batch"]),
+                        {"params": p_sh, "batch": b_sh, "cache": c_sh})
+
+    # decode: one new token against a seq_len-deep cache
+    cshapes = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    c_sh = named(mesh, cache_specs(cshapes, policy))
+    b_sh = named(mesh, batch_specs(ins["batch"], policy))
+    pos_sh = named(mesh, batch_specs(ins["pos"], policy))
+
+    def serve_step(params, cache, batch, pos):
+        return decode_step(cfg, params, cache, batch, pos, ctx=ctx)
+
+    step = jax.jit(serve_step,
+                   in_shardings=(p_sh, c_sh, b_sh, pos_sh),
+                   out_shardings=(None, c_sh),
+                   donate_argnums=(1,))
+    return CellPlan(cfg, shape, mesh, policy, ctx, step,
+                    (pshapes, cshapes, ins["batch"], ins["pos"]),
+                    {"params": p_sh, "cache": c_sh, "batch": b_sh})

@@ -1,0 +1,12 @@
+"""Model zoo: composable JAX blocks for all assigned architecture families."""
+from .config import (AttentionConfig, BlockSpec, MambaConfig, MLAConfig,
+                     ModelConfig, MoEConfig, Stage)
+from .transformer import (ShardCtx, decode_step, forward, init_cache,
+                          init_params, loss_fn, prefill)
+
+__all__ = [
+    "AttentionConfig", "BlockSpec", "MambaConfig", "MLAConfig",
+    "ModelConfig", "MoEConfig", "Stage",
+    "ShardCtx", "decode_step", "forward", "init_cache", "init_params",
+    "loss_fn", "prefill",
+]

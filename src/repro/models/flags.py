@@ -1,0 +1,50 @@
+"""Performance flags for the §Perf hillclimb.
+
+Read at trace time by the model code; set per-experiment by the dry-run
+CLI (``--flags k=v,...``) or tests.  Defaults = the paper-faithful
+baseline configuration, so every optimization is a recorded, reversible
+delta (EXPERIMENTS.md §Perf logs hypothesis -> change -> before/after).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+
+__all__ = ["PerfFlags", "FLAGS", "set_flags", "reset_flags"]
+
+
+@dataclass
+class PerfFlags:
+    #: flash attention probability blocks cast to bf16 before the PV dot
+    #: (halves the dominant HBM transient of train/prefill cells)
+    p_bf16: bool = False
+    #: Megatron-SP: residual stream sharded over ("model" x seq) between
+    #: blocks — activation carries and norm traffic / tp_size
+    seq_shard_acts: bool = False
+    #: unroll factor for recurrent time scans (mamba/rwkv6): state stays
+    #: in-register across unrolled steps => state HBM traffic / unroll
+    ssm_unroll: int = 1
+    #: decode cache writes via scatter (in-place) instead of one-hot
+    #: multiply (which streams the whole cache per token)
+    scatter_cache: bool = False
+    #: true expert-parallel all-to-all MoE dispatch (tokens stay
+    #: seq-sharded; falls back to replicated when seq doesn't divide)
+    moe_a2a: bool = False
+
+
+FLAGS = PerfFlags()
+
+
+def set_flags(**kw) -> PerfFlags:
+    for k, v in kw.items():
+        if not hasattr(FLAGS, k):
+            raise KeyError(f"unknown perf flag {k!r}")
+        cur = getattr(FLAGS, k)
+        setattr(FLAGS, k, type(cur)(int(v) if isinstance(cur, (bool, int))
+                                    and isinstance(v, str) else v))
+    return FLAGS
+
+
+def reset_flags() -> None:
+    d = PerfFlags()
+    for f in fields(PerfFlags):
+        setattr(FLAGS, f.name, getattr(d, f.name))

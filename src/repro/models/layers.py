@@ -1,0 +1,116 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings (pure JAX)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm", "init_rms_norm", "rope_freqs", "apply_rope",
+    "init_dense", "dense", "init_mlp", "mlp_block",
+    "init_embedding", "embed", "unembed",
+]
+
+Initializer = jax.nn.initializers.Initializer
+
+
+def init_rms_norm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 statistics but no f32 materialization of x.
+
+    The variance is a contraction (einsum with f32 accumulation), so the
+    only full-size traffic is one bf16 read + one bf16 write — the naive
+    ``x.astype(f32)`` form materializes two f32 copies of the residual
+    stream per norm, which §Perf attribution showed dominating HBM bytes
+    on 7k-wide models.
+    """
+    dt = x.dtype
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps)[..., None]
+    return (x.astype(jnp.float32) * inv * params["scale"]).astype(dt)
+
+
+# -- rotary embeddings --------------------------------------------------------
+
+def rope_freqs(positions: jax.Array, rotary_dim: int,
+               theta: float) -> tuple:
+    """(cos, sin) tables [*, rotary_dim/2] for integer positions."""
+    half = rotary_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               rotary_dim: Optional[int] = None) -> jax.Array:
+    """Rotate the first ``rotary_dim`` dims of the trailing head axis.
+
+    x: [..., S, H, D]; cos/sin: [..., S, rotary_dim/2] (broadcast over H).
+    Pairing is (x[0::2], x[1::2]) — interleaved, GPT-NeoX/GLM style.
+    """
+    d = x.shape[-1]
+    rd = rotary_dim or d
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x1 * s + x2 * c
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1) if rd < d else yr
+
+
+# -- dense / MLP --------------------------------------------------------------
+
+def init_dense(key: jax.Array, d_in: int, d_out: int,
+               dtype=jnp.bfloat16) -> dict:
+    scale = 1.0 / (d_in ** 0.5)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return {"w": w.astype(dtype)}
+
+
+def dense(params: dict, x: jax.Array) -> jax.Array:
+    return x @ params["w"]
+
+
+def init_mlp(key: jax.Array, d: int, d_ff: int, act: str,
+             dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": init_dense(ks[0], d, d_ff, dtype),
+        "down": init_dense(ks[1], d_ff, d, dtype),
+    }
+    if act == "silu":  # gated (SwiGLU-style)
+        p["gate"] = init_dense(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp_block(params: dict, x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        h = jax.nn.silu(dense(params["gate"], x)) * dense(params["up"], x)
+    else:
+        h = jax.nn.gelu(dense(params["up"], x))
+    return dense(params["down"], h)
+
+
+# -- embeddings ---------------------------------------------------------------
+
+def init_embedding(key: jax.Array, vocab: int, d: int,
+                   dtype=jnp.bfloat16) -> dict:
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return {"table": w.astype(dtype)}
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    """Logits via the (possibly tied) output table: [.., d] -> [.., V]."""
+    return x @ params["table"].T

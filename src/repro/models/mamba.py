@@ -1,0 +1,150 @@
+"""Mamba (S6) mixer for the Jamba hybrid (arXiv:2403.19887).
+
+Selective state-space block: in_proj -> causal depthwise conv ->
+data-dependent (dt, B, C) -> diagonal SSM recurrence -> gated out_proj.
+
+The recurrence runs as a ``lax.scan`` over time carrying the [B, d_inner,
+d_state] state.  A chunked parallel form exists, but the state is tiny
+(d_inner x 16) so the sequential scan is HBM-light and compiles to a
+single while loop — the right baseline for a 512-device dry-run; decode
+is the same body at T=1 against a carried (conv window, ssm state) cache,
+O(1) per token, which is what makes the jamba ``long_500k`` cell RUN
+where full attention is skipped.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import MambaConfig
+from .layers import dense, init_dense
+
+__all__ = ["init_mamba", "mamba_train", "mamba_decode", "init_mamba_cache"]
+
+
+def _dims(d_model: int, cfg: MambaConfig) -> Tuple[int, int]:
+    d_inner = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or -(-d_model // 16)
+    return d_inner, dt_rank
+
+
+def init_mamba(key: jax.Array, d_model: int, cfg: MambaConfig,
+               dtype=jnp.bfloat16) -> dict:
+    d_inner, dt_rank = _dims(d_model, cfg)
+    ks = jax.random.split(key, 5)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32),
+                 (d_inner, 1))
+    return {
+        "in_proj": init_dense(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, d_inner),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": init_dense(ks[2], d_inner,
+                             dt_rank + 2 * cfg.d_state, dtype),
+        "dt_proj": init_dense(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32),
+        "A_log": jnp.log(a),                       # [d_inner, d_state] f32
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": init_dense(ks[4], d_inner, d_model, dtype),
+    }
+
+
+def _ssm_step(state, inputs, A):
+    """state [B, Di, N]; dt [B, Di]; bx [B, Di, N]; c [B, N]."""
+    dt, bx, c = inputs
+    dA = jnp.exp(dt[..., None] * A)                # [B, Di, N]
+    state = state * dA + dt[..., None] * bx
+    y = jnp.einsum("bdn,bn->bd", state, c)
+    return state, y
+
+
+def _mamba_full(params: dict, x: jax.Array, cfg: MambaConfig
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (y [B,S,D], final ssm state, raw conv inputs xi_pre [B,S,Di])."""
+    b, s, d = x.shape
+    d_inner, dt_rank = _dims(d, cfg)
+    xz = dense(params["in_proj"], x)               # [B, S, 2*Di]
+    xi_pre, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv over time
+    pad = jnp.zeros((b, cfg.d_conv - 1, d_inner), xi_pre.dtype)
+    xp = jnp.concatenate([pad, xi_pre], axis=1)
+    xi = sum(xp[:, i:i + s] * params["conv_w"][i]
+             for i in range(cfg.d_conv)) + params["conv_b"]
+    xi = jax.nn.silu(xi)
+
+    proj = dense(params["x_proj"], xi)             # [B, S, R+2N]
+    dt_in = proj[..., :dt_rank]
+    bmat = proj[..., dt_rank:dt_rank + cfg.d_state]
+    cmat = proj[..., dt_rank + cfg.d_state:]
+    dt = jax.nn.softplus(dense(params["dt_proj"], dt_in).astype(jnp.float32)
+                         + params["dt_bias"])      # [B, S, Di]
+    A = -jnp.exp(params["A_log"])                  # [Di, N]
+
+    bx = jnp.einsum("bsd,bsn->bsdn", xi.astype(jnp.float32),
+                    bmat.astype(jnp.float32))
+    state0 = jnp.zeros((b, d_inner, cfg.d_state), jnp.float32)
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(bx, 1, 0),
+          jnp.moveaxis(cmat.astype(jnp.float32), 1, 0))
+    from .flags import FLAGS
+    state, ys = jax.lax.scan(lambda st, inp: _ssm_step(st, inp, A),
+                             state0, xs,
+                             unroll=max(1, FLAGS.ssm_unroll))
+    y = jnp.moveaxis(ys, 0, 1)                     # [B, S, Di]
+    y = y + xi.astype(jnp.float32) * params["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return dense(params["out_proj"], y), state, xi_pre
+
+
+def mamba_train(params: dict, x: jax.Array, cfg: MambaConfig
+                ) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D] (causal)."""
+    return _mamba_full(params, x, cfg)[0]
+
+
+def mamba_prefill(params: dict, x: jax.Array, cfg: MambaConfig
+                  ) -> Tuple[jax.Array, dict]:
+    """Full pass + carried cache (conv window of raw inputs, ssm state)."""
+    y, state, xi_pre = _mamba_full(params, x, cfg)
+    return y, {"conv": xi_pre[:, -(cfg.d_conv - 1):, :], "ssm": state}
+
+
+def init_mamba_cache(batch: int, d_model: int, cfg: MambaConfig,
+                     dtype=jnp.bfloat16) -> dict:
+    d_inner, _ = _dims(d_model, cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(params: dict, cache: dict, x: jax.Array,
+                 cfg: MambaConfig) -> Tuple[jax.Array, dict]:
+    """One step: x [B, 1, D] -> ([B, 1, D], new cache)."""
+    b, _, d = x.shape
+    d_inner, dt_rank = _dims(d, cfg)
+    xz = dense(params["in_proj"], x[:, 0])         # [B, 2*Di]
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    window = jnp.concatenate([cache["conv"], xi[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    xi_c = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+
+    proj = dense(params["x_proj"], xi_c.astype(x.dtype))
+    dt_in = proj[..., :dt_rank]
+    bmat = proj[..., dt_rank:dt_rank + cfg.d_state]
+    cmat = proj[..., dt_rank + cfg.d_state:]
+    dt = jax.nn.softplus(dense(params["dt_proj"], dt_in).astype(jnp.float32)
+                         + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    bx = jnp.einsum("bd,bn->bdn", xi_c, bmat.astype(jnp.float32))
+    state, y = _ssm_step(cache["ssm"], (dt, bx, cmat.astype(jnp.float32)),
+                         A)
+    y = y + xi_c * params["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(params["out_proj"], y[:, None, :])
+    return out, {"conv": window[:, 1:], "ssm": state}

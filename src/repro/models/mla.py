@@ -1,0 +1,177 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437 §2.1).
+
+Queries and KV are low-rank-compressed: q through a q_lora_rank
+bottleneck, KV through a kv_lora_rank latent c_kv that is *the only thing
+cached at decode* (plus the decoupled RoPE key k_pe) — the memory win
+that makes 128-head attention servable.  Per-head keys carry a nope
+(content) part from the latent and a shared rope (position) part.
+
+Decode here uses the *absorbed* form: rather than expanding the latent
+cache into per-head keys/values (128 heads x 192 dims), the per-head
+content projections are folded into the query / output sides, so score
+and value contractions run directly against the [S, kv_lora_rank] latent
+— O(S * r) per head instead of O(S * d_qk) cache traffic.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import MLAConfig
+from .flags import FLAGS
+from .layers import apply_rope, dense, init_dense, init_rms_norm, \
+    rms_norm, rope_freqs
+
+__all__ = ["init_mla", "mla_train", "mla_decode", "init_mla_cache"]
+
+NEG_INF = -1e30
+
+
+def init_mla(key: jax.Array, d_model: int, cfg: MLAConfig,
+             dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    h, dq = cfg.n_heads, cfg.qk_head_dim
+    return {
+        # query path: d -> q_lora -> heads*(nope+rope)
+        "wq_a": init_dense(ks[0], d_model, cfg.q_lora_rank, dtype),
+        "q_norm": init_rms_norm(cfg.q_lora_rank),
+        "wq_b": init_dense(ks[1], cfg.q_lora_rank, h * dq, dtype),
+        # kv path: d -> (kv_lora + rope_dim)
+        "wkv_a": init_dense(ks[2], d_model,
+                            cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype),
+        "kv_norm": init_rms_norm(cfg.kv_lora_rank),
+        # latent -> heads*(nope_k + v)
+        "wkv_b": init_dense(ks[3], cfg.kv_lora_rank,
+                            h * (cfg.qk_nope_head_dim + cfg.v_head_dim),
+                            dtype),
+        "wo": init_dense(ks[4], h * cfg.v_head_dim, d_model, dtype),
+    }
+
+
+def _project_q(params: dict, x: jax.Array, positions: jax.Array,
+               cfg: MLAConfig, eps: float) -> Tuple[jax.Array, jax.Array]:
+    """-> q_nope [B,S,H,Dn], q_pe [B,S,H,Dr] (rope applied)."""
+    b, s, _ = x.shape
+    q = dense(params["wq_b"],
+              rms_norm(params["q_norm"], dense(params["wq_a"], x), eps))
+    q = q.reshape(b, s, cfg.n_heads, cfg.qk_head_dim)
+    q_nope = q[..., :cfg.qk_nope_head_dim]
+    q_pe = q[..., cfg.qk_nope_head_dim:]
+    cos, sin = rope_freqs(positions, cfg.qk_rope_head_dim, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos, sin)
+    return q_nope, q_pe
+
+
+def _project_kv_latent(params: dict, x: jax.Array, positions: jax.Array,
+                       cfg: MLAConfig, eps: float
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """-> c_kv [B,S,R] (normed latent), k_pe [B,S,Dr] (rope applied)."""
+    kv = dense(params["wkv_a"], x)
+    c_kv = rms_norm(params["kv_norm"], kv[..., :cfg.kv_lora_rank], eps)
+    k_pe = kv[..., cfg.kv_lora_rank:]
+    cos, sin = rope_freqs(positions, cfg.qk_rope_head_dim, cfg.rope_theta)
+    k_pe = apply_rope(k_pe[..., None, :], cos, sin)[..., 0, :]
+    return c_kv, k_pe
+
+
+def mla_train(params: dict, x: jax.Array, positions: jax.Array,
+              cfg: MLAConfig, *, eps: float = 1e-6,
+              chunk: int = 1024) -> jax.Array:
+    """Full-sequence causal MLA (expanded form) on the shared flash core.
+
+    The nope/rope split folds into a single QK contraction: scores =
+    [q_nope, q_pe] . [k_nope, k_pe-broadcast] over the concatenated head
+    dim, so the double-chunked online-softmax (and its §Perf
+    improvements) is shared with GQA attention.
+    """
+    from .attention import flash_attention
+
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_pe = _project_q(params, x, positions, cfg, eps)
+    c_kv, k_pe = _project_kv_latent(params, x, positions, cfg, eps)
+    kv = dense(params["wkv_b"], c_kv).reshape(
+        b, s, h, cfg.qk_nope_head_dim + cfg.v_head_dim)
+    k_nope = kv[..., :cfg.qk_nope_head_dim]
+    v = kv[..., cfg.qk_nope_head_dim:]
+
+    scale = cfg.qk_head_dim ** -0.5
+    q = jnp.concatenate([q_nope, q_pe], axis=-1) * scale  # [B,S,H,Dn+Dr]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :],
+                                  (b, s, h, cfg.qk_rope_head_dim))],
+        axis=-1)
+    out = flash_attention(q.reshape(b, s, h, 1, cfg.qk_head_dim),
+                          k, v, causal=True)
+    out = out.reshape(b, s, h * cfg.v_head_dim)
+    return dense(params["wo"], out)
+
+
+def mla_prefill(params: dict, x: jax.Array, positions: jax.Array,
+                cfg: MLAConfig, *, eps: float = 1e-6
+                ) -> Tuple[jax.Array, dict]:
+    """Full-sequence pass that also emits the latent cache for [0, S)."""
+    out = mla_train(params, x, positions, cfg, eps=eps)
+    c_kv, k_pe = _project_kv_latent(params, x, positions, cfg, eps)
+    return out, {"c_kv": c_kv, "k_pe": k_pe}
+
+
+def init_mla_cache(batch: int, max_seq: int, cfg: MLAConfig,
+                   dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(params: dict, cache: dict, x: jax.Array, pos: jax.Array,
+               cfg: MLAConfig, *, eps: float = 1e-6
+               ) -> Tuple[jax.Array, dict]:
+    """One decode step against the compressed latent cache (absorbed form).
+
+    x: [B, 1, D]; pos: [B].  Cache holds c_kv [B, S, R] and k_pe [B, S, Dr].
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    r = cfg.kv_lora_rank
+    max_seq = cache["c_kv"].shape[1]
+
+    q_nope, q_pe = _project_q(params, x, pos[:, None], cfg, eps)
+    c_new, kpe_new = _project_kv_latent(params, x, pos[:, None], cfg, eps)
+
+    if FLAGS.scatter_cache:
+        bi = jnp.arange(b)
+        c_kv = cache["c_kv"].at[bi, pos].set(
+            c_new[:, 0].astype(cache["c_kv"].dtype))
+        k_pe = cache["k_pe"].at[bi, pos].set(
+            kpe_new[:, 0].astype(cache["k_pe"].dtype))
+    else:
+        oh = jax.nn.one_hot(pos, max_seq, dtype=cache["c_kv"].dtype)
+        c_kv = cache["c_kv"] * (1 - oh)[..., None] \
+            + oh[..., None] * c_new.astype(cache["c_kv"].dtype)
+        k_pe = cache["k_pe"] * (1 - oh)[..., None] \
+            + oh[..., None] * kpe_new.astype(cache["k_pe"].dtype)
+
+    # absorb W^{kv_b} content-key block into the query:  q_abs [B,H,R]
+    wkv_b = params["wkv_b"]["w"].reshape(
+        r, h, cfg.qk_nope_head_dim + cfg.v_head_dim)
+    w_k = wkv_b[..., :cfg.qk_nope_head_dim]        # [R, H, Dn]
+    w_v = wkv_b[..., cfg.qk_nope_head_dim:]        # [R, H, Dv]
+    scale = cfg.qk_head_dim ** -0.5
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0] * scale, w_k)
+    scores = jnp.einsum("bhr,bsr->bhs", q_abs,
+                        c_kv.astype(q_abs.dtype),
+                        preferred_element_type=jnp.float32)
+    scores += jnp.einsum("bhd,bsd->bhs", q_pe[:, 0] * scale,
+                         k_pe.astype(q_pe.dtype),
+                         preferred_element_type=jnp.float32)
+    mask = jnp.arange(max_seq)[None, :] <= pos[:, None]
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    # attend in latent space, then expand through the value block
+    ctx = jnp.einsum("bhs,bsr->bhr", p.astype(c_kv.dtype), c_kv)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_v)
+    out = out.reshape(b, 1, h * cfg.v_head_dim)
+    return dense(params["wo"], out), {"c_kv": c_kv, "k_pe": k_pe}

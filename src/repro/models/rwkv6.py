@@ -1,0 +1,214 @@
+"""RWKV-6 "Finch" mixer (arXiv:2404.05892) — attention-free linear RNN.
+
+Time-mix: per-head state S in R^{hd x hd} updated with *data-dependent
+decay* w_t (the Finch contribution over RWKV-5's static decay):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Token-shift mixing interpolates each projection's input between x_t and
+x_{t-1} with learned (and for RWKV-6, data-dependent) coefficients; the
+decay w uses a small LoRA so it depends on the shifted input.  Channel
+mix is the squared-ReLU RWKV FFN with its own token shift.
+
+Recurrence = ``lax.scan`` over time (state is [B, H, hd, hd]); decode
+carries (state, last-token) — O(1) per token, hence ``long_500k`` RUNS
+for this arch.  All state math in f32 for stability; projections bf16.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, init_dense
+
+__all__ = ["init_rwkv_tmix", "rwkv_tmix_train", "rwkv_tmix_prefill",
+           "rwkv_tmix_decode", "init_rwkv_cmix", "rwkv_cmix_train",
+           "rwkv_cmix_prefill", "rwkv_cmix_decode",
+           "init_rwkv_tmix_cache", "init_rwkv_cmix_cache"]
+
+LORA_R = 64
+
+
+def init_rwkv_tmix(key: jax.Array, d: int, head_size: int,
+                   dtype=jnp.bfloat16) -> dict:
+    h = d // head_size
+    ks = jax.random.split(key, 10)
+    return {
+        "wr": init_dense(ks[0], d, d, dtype),
+        "wk": init_dense(ks[1], d, d, dtype),
+        "wv": init_dense(ks[2], d, d, dtype),
+        "wg": init_dense(ks[3], d, d, dtype),
+        "wo": init_dense(ks[4], d, d, dtype),
+        # token-shift mix coefficients per projection (r, k, v, g, w)
+        "mix": (jax.random.uniform(ks[5], (5, d), jnp.float32)).astype(dtype),
+        # data-dependent decay LoRA: d -> R -> d
+        "w_lora_a": init_dense(ks[6], d, LORA_R, dtype),
+        "w_lora_b": init_dense(ks[7], LORA_R, d, dtype),
+        "w_bias": jnp.full((d,), -6.0, jnp.float32),
+        # per-head bonus u
+        "u": (jax.random.normal(ks[8], (h, head_size), jnp.float32)
+              * 0.1),
+        "ln_out": {"scale": jnp.ones((d,), jnp.float32)},
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x: [B, S, D] -> x shifted right by one; position 0 gets ``prev``."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _tmix_inputs(params: dict, x: jax.Array, x_prev: jax.Array):
+    xs = _token_shift(x, x_prev)
+    mix = params["mix"]
+    feats = [x + (xs - x) * mix[i] for i in range(5)]
+    r_in, k_in, v_in, g_in, w_in = feats
+    r = dense(params["wr"], r_in)
+    k = dense(params["wk"], k_in)
+    v = dense(params["wv"], v_in)
+    g = jax.nn.silu(dense(params["wg"], g_in))
+    w_raw = dense(params["w_lora_b"],
+                  jnp.tanh(dense(params["w_lora_a"], w_in)))
+    # decay in (0, 1): exp(-exp(..)) — data-dependent (Finch)
+    w = jnp.exp(-jnp.exp(w_raw.astype(jnp.float32) + params["w_bias"]))
+    return r, k, v, g, w
+
+
+def _heads(x: jax.Array, h: int) -> jax.Array:
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h)
+
+
+def _tmix_full(params: dict, x: jax.Array, head_size: int,
+               state0: jax.Array, x_prev: jax.Array):
+    b, s, d = x.shape
+    h = d // head_size
+    r, k, v, g, w = _tmix_inputs(params, x, x_prev)
+    r = _heads(r, h).astype(jnp.float32)
+    k = _heads(k, h).astype(jnp.float32)
+    v = _heads(v, h).astype(jnp.float32)
+    w = _heads(w, h)
+    u = params["u"]
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                       # [B, H, hd]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)   # [B, H, hd, hd]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None]
+                         * kv)
+        state = state * wt[..., None] + kv
+        return state, out
+
+    xs = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
+    from .flags import FLAGS
+    state, outs = jax.lax.scan(step, state0, xs,
+                               unroll=max(1, FLAGS.ssm_unroll))
+    o = jnp.moveaxis(outs, 0, 1)                   # [B, S, H, hd]
+    # group-norm per head (ln_out approximates RWKV's GroupNorm)
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = ((o - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, s, d)
+    o = o * params["ln_out"]["scale"]
+    return dense(params["wo"], (o.astype(x.dtype) * g)), state
+
+
+def rwkv_tmix_train(params: dict, x: jax.Array, head_size: int
+                    ) -> jax.Array:
+    b, s, d = x.shape
+    h = d // head_size
+    state0 = jnp.zeros((b, h, head_size, head_size), jnp.float32)
+    return _tmix_full(params, x, head_size, state0,
+                      jnp.zeros((b, d), x.dtype))[0]
+
+
+def rwkv_tmix_prefill(params: dict, x: jax.Array, head_size: int
+                      ) -> Tuple[jax.Array, dict]:
+    """Full pass returning the carried (state, last input) cache slice."""
+    b, s, d = x.shape
+    h = d // head_size
+    state0 = jnp.zeros((b, h, head_size, head_size), jnp.float32)
+    y, state = _tmix_full(params, x, head_size, state0,
+                          jnp.zeros((b, d), x.dtype))
+    return y, {"state": state, "x_prev": x[:, -1]}
+
+
+def init_rwkv_cmix(key: jax.Array, d: int, d_ff: int,
+                   dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "wk": init_dense(ks[0], d, d_ff, dtype),
+        "wv": init_dense(ks[1], d_ff, d, dtype),
+        "wr": init_dense(ks[2], d, d, dtype),
+        "mix": (jax.random.uniform(key, (2, d), jnp.float32)).astype(dtype),
+    }
+
+
+def rwkv_cmix_train(params: dict, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    xs = _token_shift(x, jnp.zeros((b, d), x.dtype))
+    mix = params["mix"]
+    k_in = x + (xs - x) * mix[0]
+    r_in = x + (xs - x) * mix[1]
+    k = jnp.square(jax.nn.relu(dense(params["wk"], k_in)))
+    kv = dense(params["wv"], k)
+    return jax.nn.sigmoid(dense(params["wr"], r_in)) * kv
+
+
+# -- decode-time (single step, carried state) ---------------------------------
+
+def init_rwkv_tmix_cache(batch: int, d: int, head_size: int,
+                         dtype=jnp.bfloat16) -> dict:
+    h = d // head_size
+    return {
+        "state": jnp.zeros((batch, h, head_size, head_size), jnp.float32),
+        "x_prev": jnp.zeros((batch, d), dtype),     # time-mix shift
+    }
+
+
+def init_rwkv_cmix_cache(batch: int, d: int, dtype=jnp.bfloat16) -> dict:
+    return {"x_prev": jnp.zeros((batch, d), dtype)}  # channel-mix shift
+
+
+def rwkv_tmix_decode(params: dict, cache: dict, x: jax.Array,
+                     head_size: int) -> Tuple[jax.Array, dict]:
+    """x: [B, 1, D]."""
+    b, _, d = x.shape
+    h = d // head_size
+    r, k, v, g, w = _tmix_inputs(params, x,
+                                 cache["x_prev"].astype(x.dtype))
+    rt = _heads(r, h)[:, 0].astype(jnp.float32)
+    kt = _heads(k, h)[:, 0].astype(jnp.float32)
+    vt = _heads(v, h)[:, 0].astype(jnp.float32)
+    wt = _heads(w, h)[:, 0]
+    u = params["u"]
+    kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+    out = jnp.einsum("bhk,bhkv->bhv", rt,
+                     cache["state"] + u[None, :, :, None] * kv)
+    state = cache["state"] * wt[..., None] + kv
+    o = out.reshape(b, h, head_size)
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = ((o - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, 1, d)
+    o = o * params["ln_out"]["scale"]
+    y = dense(params["wo"], o.astype(x.dtype) * g)
+    return y, {"state": state, "x_prev": x[:, 0]}
+
+
+def rwkv_cmix_prefill(params: dict, x: jax.Array
+                      ) -> Tuple[jax.Array, dict]:
+    return rwkv_cmix_train(params, x), {"x_prev": x[:, -1]}
+
+
+def rwkv_cmix_decode(params: dict, cache: dict, x: jax.Array
+                     ) -> Tuple[jax.Array, dict]:
+    b, _, d = x.shape
+    xs = cache["x_prev"].astype(x.dtype)[:, None, :]
+    mix = params["mix"]
+    k_in = x + (xs - x) * mix[0]
+    r_in = x + (xs - x) * mix[1]
+    k = jnp.square(jax.nn.relu(dense(params["wk"], k_in)))
+    kv = dense(params["wv"], k)
+    y = jax.nn.sigmoid(dense(params["wr"], r_in)) * kv
+    return y, {"x_prev": x[:, 0]}

@@ -1,0 +1,454 @@
+"""Model assembly: stage/period scan, init, train/prefill/decode passes.
+
+Every architecture is a sequence of stages; a stage scans a period
+pattern (static list of blocks) over its stacked parameters, which keeps
+the traced HLO at one period per stage regardless of depth (61-layer
+DeepSeek-V3 traces 2 period bodies).  The same scan drives the prefill
+and decode paths with a per-layer cache pytree stacked the same way.
+
+Mesh-aware pieces (MoE shard_map, activation sharding constraints)
+receive a ``ShardCtx``; with ctx=None everything runs single-device (the
+smoke-test path).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .attention import (attention_decode, attention_prefill,
+                        attention_train, init_attention, init_kv_cache)
+from .config import BlockSpec, ModelConfig, Stage
+from .layers import (dense, embed, init_dense, init_embedding, init_mlp,
+                     init_rms_norm, mlp_block, rms_norm, unembed)
+from .mamba import (init_mamba, init_mamba_cache, mamba_decode,
+                    mamba_prefill, mamba_train)
+from .mla import (init_mla, init_mla_cache, mla_decode, mla_prefill,
+                  mla_train)
+from .moe import init_moe, moe_apply, moe_block_local, shared_expert_mlp
+from .rwkv6 import (init_rwkv_cmix, init_rwkv_cmix_cache, init_rwkv_tmix,
+                    init_rwkv_tmix_cache, rwkv_cmix_decode,
+                    rwkv_cmix_prefill, rwkv_cmix_train, rwkv_tmix_decode,
+                    rwkv_tmix_prefill, rwkv_tmix_train)
+
+__all__ = ["ShardCtx", "init_params", "forward", "prefill", "decode_step",
+           "init_cache", "loss_fn"]
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Mesh context threaded to mesh-aware layers."""
+    mesh: Any
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _constrain_act(x: jax.Array, ctx: Optional[ShardCtx]) -> jax.Array:
+    """Keep hidden states batch-sharded (and, under the §Perf SP flag,
+    sequence-sharded over the model axis) between blocks."""
+    if ctx is None:
+        return x
+    from .flags import FLAGS
+    b = x.shape[0]
+    dp_ok = all(b % ctx.mesh.shape[a] == 0 for a in ctx.dp_axes)
+    dp = ctx.dp_axes if dp_ok else None
+    seq = None
+    if (FLAGS.seq_shard_acts and x.ndim >= 3
+            and x.shape[1] % ctx.mesh.shape[ctx.tp_axis] == 0
+            and x.shape[1] > 1):
+        seq = ctx.tp_axis  # Megatron-SP: residual stream S/tp per device
+    if dp is None and seq is None:
+        return x
+    return ctx.constrain(x, P(dp, seq, *([None] * (x.ndim - 2))))
+
+
+# -- init ---------------------------------------------------------------------
+
+def _init_block(key: jax.Array, cfg: ModelConfig, spec: BlockSpec) -> dict:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    if spec.mixer != "none":
+        p["norm1"] = init_rms_norm(d)
+    if spec.mixer == "attn":
+        p["mixer"] = init_attention(ks[0], d,
+                                    spec.attn_override or cfg.attention, dt)
+    elif spec.mixer == "mla":
+        p["mixer"] = init_mla(ks[0], d, cfg.mla, dt)
+    elif spec.mixer == "mamba":
+        p["mixer"] = init_mamba(ks[0], d, cfg.mamba, dt)
+    elif spec.mixer == "rwkv6":
+        p["mixer"] = init_rwkv_tmix(ks[0], d, cfg.rwkv_head_size, dt)
+    if spec.ffn != "none":
+        p["norm2"] = init_rms_norm(d)
+    if spec.ffn == "mlp":
+        p["ffn"] = init_mlp(ks[1], d, cfg.d_ff, cfg.act, dt)
+    elif spec.ffn == "moe":
+        p["ffn"] = init_moe(ks[1], d, cfg.moe, dt)
+    elif spec.ffn == "rwkv6_cmix":
+        p["ffn"] = init_rwkv_cmix(ks[1], d, cfg.d_ff, dt)
+    return p
+
+
+def _init_period(key: jax.Array, cfg: ModelConfig, stage: Stage) -> dict:
+    ks = jax.random.split(key, len(stage.pattern))
+    return {f"block{i}": _init_block(ks[i], cfg, spec)
+            for i, spec in enumerate(stage.pattern)}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dt = _dtype(cfg)
+    n_stages = len(cfg.stages)
+    ks = jax.random.split(key, n_stages + 3)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(ks[1], cfg.d_model,
+                                       cfg.vocab_size, dt)
+    for si, stage in enumerate(cfg.stages):
+        pkeys = jax.random.split(ks[2 + si], stage.n_periods)
+        params[f"stage{si}"] = jax.vmap(
+            lambda k, _stage=stage: _init_period(k, cfg, _stage))(pkeys)
+    if cfg.mtp_depth:
+        # DeepSeek-V3 MTP: an extra block predicting token t+2 from
+        # (h_t, embed(token_{t+1})) — training-only auxiliary head.
+        mtp_spec = BlockSpec(mixer="mla" if cfg.mla else "attn", ffn="mlp")
+        params["mtp"] = {
+            "combine": init_dense(ks[-1], 2 * cfg.d_model, cfg.d_model, dt),
+            "block": _init_block(ks[-1], cfg, mtp_spec),
+        }
+    return params
+
+
+# -- train forward ------------------------------------------------------------
+
+def _apply_block(cfg: ModelConfig, spec: BlockSpec, p: dict, x: jax.Array,
+                 positions: jax.Array, ctx: Optional[ShardCtx]
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """-> (x, aux_loss)"""
+    aux = jnp.float32(0.0)
+    if spec.mixer != "none":
+        h = rms_norm(p["norm1"], x, cfg.norm_eps)
+        if spec.mixer == "attn":
+            h = attention_train(p["mixer"], h, positions,
+                                spec.attn_override or cfg.attention)
+        elif spec.mixer == "mla":
+            h = mla_train(p["mixer"], h, positions, cfg.mla,
+                          eps=cfg.norm_eps)
+        elif spec.mixer == "mamba":
+            h = mamba_train(p["mixer"], h, cfg.mamba)
+        elif spec.mixer == "rwkv6":
+            h = rwkv_tmix_train(p["mixer"], h, cfg.rwkv_head_size)
+        x = x + h
+        x = _constrain_act(x, ctx)
+    if spec.ffn != "none":
+        h = rms_norm(p["norm2"], x, cfg.norm_eps)
+        if spec.ffn == "mlp":
+            h = mlp_block(p["ffn"], h, cfg.act)
+        elif spec.ffn == "moe":
+            h, aux = _apply_moe(cfg, p["ffn"], h, ctx)
+        elif spec.ffn == "rwkv6_cmix":
+            h = rwkv_cmix_train(p["ffn"], h)
+        x = x + h
+        x = _constrain_act(x, ctx)
+    return x, aux
+
+
+def _apply_moe(cfg: ModelConfig, p: dict, h: jax.Array,
+               ctx: Optional[ShardCtx]) -> Tuple[jax.Array, jax.Array]:
+    if ctx is not None:
+        from .flags import FLAGS
+        dispatch = "a2a" if (FLAGS.moe_a2a and h.shape[1]
+                             % ctx.mesh.shape[ctx.tp_axis] == 0
+                             and h.shape[1] > 1) else "replicated"
+        out, aux, _ = moe_apply(p, h, cfg.moe, mesh=ctx.mesh,
+                                dp_axes=ctx.dp_axes, tp_axis=ctx.tp_axis,
+                                act=cfg.act, dispatch=dispatch)
+        return out, aux
+    b, s, d = h.shape
+    out, aux, _ = moe_block_local(
+        p, h.reshape(b * s, d), cfg.moe, n_shards=1,
+        shard_ix=jnp.int32(0), tp_axis=None, act=cfg.act)
+    out = out.reshape(b, s, d)
+    if cfg.moe.n_shared:
+        out = out + shared_expert_mlp(p["shared"], h)
+    return out, aux
+
+
+def _wrap_remat(body, remat: str):
+    if remat == "none":
+        return body
+    if remat == "full":
+        return jax.checkpoint(body)
+    if remat == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(f"unknown remat policy {remat!r}")
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *,
+            ctx: Optional[ShardCtx] = None, remat: str = "full",
+            return_hidden: bool = False):
+    """Training forward -> (logits [B,S,V], aux_loss[, hidden])."""
+    if cfg.frontend is not None:
+        x = batch["embeds"].astype(_dtype(cfg))
+        b, s, _ = x.shape
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens)
+    x = _constrain_act(x, ctx)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    aux_total = jnp.float32(0.0)
+
+    for si, stage in enumerate(cfg.stages):
+        def period_body(carry, period_params, _stage=stage):
+            xc, auxc = carry
+            for i, spec in enumerate(_stage.pattern):
+                xc, aux = _apply_block(cfg, spec,
+                                       period_params[f"block{i}"],
+                                       xc, positions, ctx)
+                auxc = auxc + aux
+            return (xc, auxc), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _wrap_remat(period_body, remat), (x, aux_total),
+            params[f"stage{si}"])
+
+    h_final = x
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["lm_head"], x)
+    if return_hidden:
+        return logits, aux_total, h_final
+    return logits, aux_total
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *,
+            ctx: Optional[ShardCtx] = None,
+            remat: str = "full") -> Tuple[jax.Array, dict]:
+    """Causal LM loss (+ router aux + optional MTP auxiliary head)."""
+    logits, aux, h = forward(cfg, params, batch, ctx=ctx, remat=remat,
+                             return_hidden=True)
+    nll = _xent(logits, batch["labels"])
+    total = nll + (cfg.moe.router_aux_weight * aux if cfg.moe else 0.0)
+    metrics = {"nll": nll, "router_aux": aux}
+    if cfg.mtp_depth and "mtp" in params and cfg.frontend is None:
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        b, s = tokens.shape
+        nxt = embed(params["embed"], tokens[:, 1:])           # t+1 tokens
+        comb = jnp.concatenate([h[:, :-1], nxt], axis=-1)
+        hm = dense(params["mtp"]["combine"], comb)
+        positions = jnp.broadcast_to(jnp.arange(s - 1)[None, :],
+                                     (b, s - 1))
+        hm, _ = _apply_block(cfg, BlockSpec(
+            mixer="mla" if cfg.mla else "attn", ffn="mlp"),
+            params["mtp"]["block"], hm, positions, ctx)
+        hm = rms_norm(params["final_norm"], hm, cfg.norm_eps)
+        logits2 = (unembed(params["embed"], hm) if cfg.tie_embeddings
+                   else dense(params["lm_head"], hm))
+        mtp_nll = _xent(logits2, labels[:, 1:])
+        total = total + 0.3 * mtp_nll
+        metrics["mtp_nll"] = mtp_nll
+    return total, metrics
+
+
+# -- cache --------------------------------------------------------------------
+
+def _init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                      max_seq: int, dt) -> dict:
+    c: Dict[str, Any] = {}
+    if spec.mixer == "attn":
+        c["mixer"] = init_kv_cache(batch, max_seq,
+                                   spec.attn_override or cfg.attention, dt)
+    elif spec.mixer == "mla":
+        c["mixer"] = init_mla_cache(batch, max_seq, cfg.mla, dt)
+    elif spec.mixer == "mamba":
+        c["mixer"] = init_mamba_cache(batch, cfg.d_model, cfg.mamba, dt)
+    elif spec.mixer == "rwkv6":
+        c["mixer"] = init_rwkv_tmix_cache(batch, cfg.d_model,
+                                          cfg.rwkv_head_size, dt)
+    if spec.ffn == "rwkv6_cmix":
+        c["ffn"] = init_rwkv_cmix_cache(batch, cfg.d_model, dt)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Stacked decode cache mirroring the stage/period structure."""
+    dt = _dtype(cfg)
+    cache: Dict[str, Any] = {}
+    for si, stage in enumerate(cfg.stages):
+        one = {f"block{i}": _init_block_cache(cfg, spec, batch, max_seq, dt)
+               for i, spec in enumerate(stage.pattern)}
+        cache[f"stage{si}"] = jax.tree.map(
+            lambda x: jnp.zeros((stage.n_periods,) + x.shape, x.dtype),
+            one)
+    return cache
+
+
+# -- prefill ------------------------------------------------------------------
+
+def _apply_block_prefill(cfg: ModelConfig, spec: BlockSpec, p: dict,
+                         x: jax.Array, positions: jax.Array,
+                         ctx: Optional[ShardCtx]
+                         ) -> Tuple[jax.Array, dict]:
+    c: Dict[str, Any] = {}
+    if spec.mixer != "none":
+        h = rms_norm(p["norm1"], x, cfg.norm_eps)
+        if spec.mixer == "attn":
+            h, c["mixer"] = attention_prefill(
+                p["mixer"], h, positions, spec.attn_override
+                or cfg.attention)
+        elif spec.mixer == "mla":
+            h, c["mixer"] = mla_prefill(p["mixer"], h, positions, cfg.mla,
+                                        eps=cfg.norm_eps)
+        elif spec.mixer == "mamba":
+            h, c["mixer"] = mamba_prefill(p["mixer"], h, cfg.mamba)
+        elif spec.mixer == "rwkv6":
+            h, c["mixer"] = rwkv_tmix_prefill(p["mixer"], h,
+                                              cfg.rwkv_head_size)
+        x = x + h
+        x = _constrain_act(x, ctx)
+    if spec.ffn != "none":
+        h = rms_norm(p["norm2"], x, cfg.norm_eps)
+        if spec.ffn == "mlp":
+            h = mlp_block(p["ffn"], h, cfg.act)
+        elif spec.ffn == "moe":
+            h, _ = _apply_moe(cfg, p["ffn"], h, ctx)
+        elif spec.ffn == "rwkv6_cmix":
+            h, c["ffn"] = rwkv_cmix_prefill(p["ffn"], h)
+        x = x + h
+        x = _constrain_act(x, ctx)
+    return x, c
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, *,
+            ctx: Optional[ShardCtx] = None
+            ) -> Tuple[jax.Array, dict]:
+    """Prefill a prompt of length S -> (last-position logits [B, V],
+    cache filled for positions [0, S))."""
+    if cfg.frontend is not None:
+        x = batch["embeds"].astype(_dtype(cfg))
+        b, s, _ = x.shape
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens)
+    x = _constrain_act(x, ctx)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    cache: Dict[str, Any] = {}
+
+    for si, stage in enumerate(cfg.stages):
+        def period_body(xc, period_params, _stage=stage):
+            pc = {}
+            for i, spec in enumerate(_stage.pattern):
+                xc, c = _apply_block_prefill(
+                    cfg, spec, period_params[f"block{i}"], xc, positions,
+                    ctx)
+                pc[f"block{i}"] = c
+            return xc, pc
+
+        x, cache[f"stage{si}"] = jax.lax.scan(period_body, x,
+                                              params[f"stage{si}"])
+
+    x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["lm_head"], x)
+    return logits[:, 0], cache
+
+
+# -- decode -------------------------------------------------------------------
+
+def _apply_block_decode(cfg: ModelConfig, spec: BlockSpec, p: dict,
+                        c: dict, x: jax.Array, pos: jax.Array,
+                        ctx: Optional[ShardCtx]
+                        ) -> Tuple[jax.Array, dict]:
+    new_c: Dict[str, Any] = {}
+    if spec.mixer != "none":
+        h = rms_norm(p["norm1"], x, cfg.norm_eps)
+        if spec.mixer == "attn":
+            h, new_c["mixer"] = attention_decode(
+                p["mixer"], c["mixer"], h, pos,
+                spec.attn_override or cfg.attention)
+        elif spec.mixer == "mla":
+            h, new_c["mixer"] = mla_decode(p["mixer"], c["mixer"], h, pos,
+                                           cfg.mla, eps=cfg.norm_eps)
+        elif spec.mixer == "mamba":
+            h, new_c["mixer"] = mamba_decode(p["mixer"], c["mixer"], h,
+                                             cfg.mamba)
+        elif spec.mixer == "rwkv6":
+            h, new_c["mixer"] = rwkv_tmix_decode(p["mixer"], c["mixer"], h,
+                                                 cfg.rwkv_head_size)
+        x = x + h
+    if spec.ffn != "none":
+        h = rms_norm(p["norm2"], x, cfg.norm_eps)
+        if spec.ffn == "mlp":
+            h = mlp_block(p["ffn"], h, cfg.act)
+        elif spec.ffn == "moe":
+            h, _ = _apply_moe(cfg, p["ffn"], h, ctx)
+        elif spec.ffn == "rwkv6_cmix":
+            h, new_c["ffn"] = rwkv_cmix_decode(p["ffn"], c["ffn"], h)
+        x = x + h
+    return x, new_c
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                batch: dict, pos: jax.Array, *,
+                ctx: Optional[ShardCtx] = None
+                ) -> Tuple[jax.Array, dict]:
+    """One-token decode: batch {tokens [B,1] | embeds [B,1,D]}, pos [B].
+
+    Returns (logits [B, V], new cache)."""
+    if cfg.frontend is not None:
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = embed(params["embed"], batch["tokens"])
+    new_cache: Dict[str, Any] = {}
+
+    for si, stage in enumerate(cfg.stages):
+        def period_body(xc, inp, _stage=stage):
+            period_params, period_cache = inp
+            new_pc = {}
+            for i, spec in enumerate(_stage.pattern):
+                xc, nc = _apply_block_decode(
+                    cfg, spec, period_params[f"block{i}"],
+                    period_cache[f"block{i}"], xc, pos, ctx)
+                new_pc[f"block{i}"] = nc
+            return xc, new_pc
+
+        x, new_cache[f"stage{si}"] = jax.lax.scan(
+            period_body, x, (params[f"stage{si}"], cache[f"stage{si}"]))
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["lm_head"], x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,9 @@
+from .adamw import (AdamWConfig, adamw_update, clip_by_global_norm,
+                    cosine_schedule, global_norm, init_opt_state)
+from .compression import compress, decompress, ef_roundtrip, init_ef
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "clip_by_global_norm",
+    "cosine_schedule", "global_norm", "init_opt_state",
+    "compress", "decompress", "ef_roundtrip", "init_ef",
+]

@@ -1,0 +1,53 @@
+"""Int8 gradient compression with error feedback (cross-pod all-reduce).
+
+At 1000+ nodes the "pod" axis all-reduce crosses data-center
+interconnect; int8 quantization cuts those bytes 4x (bf16->int8 with a
+per-tensor f32 scale).  Error feedback accumulates the quantization
+residual locally and re-injects it next step, which keeps convergence
+(Seide et al. 1-bit SGD lineage; Karimireddy et al. EF-signSGD).
+
+``compress``/``decompress`` are pure and tested for the contraction
+property; ``ef_roundtrip`` is the training-loop integration point — the
+train step quantizes the *pod-mean* gradient before the cross-pod psum
+when ``pods > 1`` (see launch/steps.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress", "decompress", "ef_roundtrip", "init_ef"]
+
+
+def compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """f32/bf16 -> (int8 values, f32 scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array,
+               dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_ef(params) -> dict:
+    """Per-leaf error-feedback residual buffers (f32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_roundtrip(grads, ef) -> Tuple[dict, dict]:
+    """Quantize (g + ef) leafwise; return (dequantized grads, new ef)."""
+    def one(g, e):
+        tot = g.astype(jnp.float32) + e
+        q, s = compress(tot)
+        deq = decompress(q, s)
+        return deq.astype(g.dtype), tot - deq
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

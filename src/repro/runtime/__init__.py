@@ -1,0 +1,13 @@
+from .elastic import (ElasticRunner, FailureInjector,
+                      rescale_batch_schedule, reshard_tree)
+from .sharding import (ShardingPolicy, batch_specs, cache_specs, named,
+                       param_specs, prepare, zero_extend)
+from .straggler import SpeculativeExecutor
+
+__all__ = [
+    "ElasticRunner", "FailureInjector", "rescale_batch_schedule",
+    "reshard_tree",
+    "ShardingPolicy", "batch_specs", "cache_specs", "named",
+    "param_specs", "prepare", "zero_extend",
+    "SpeculativeExecutor",
+]

@@ -1,0 +1,240 @@
+"""Sharding rule engine: logical param/cache/batch layouts -> mesh specs.
+
+Tensor-parallel ("model" axis) assignment is *name-based* with
+divisibility checks; whenever an axis does not divide the mesh axis the
+rule degrades to replication and the degradation is recorded (DESIGN.md
+§3 — e.g. gemma3-1b's 4 heads cannot be 16-way sharded, so only
+d_ff/vocab shard).  FSDP ("data" axis) is then layered on the largest
+remaining unsharded dim of large leaves — ZeRO-3-style at-rest sharding;
+XLA inserts the per-layer all-gathers inside the scan loop.
+
+Head-boundary note: attention projection output dims are sharded only if
+the *head count* divides the axis, so [d, H*hd] shards never split a head.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingPolicy", "param_specs", "batch_specs", "cache_specs",
+           "named", "zero_extend"]
+
+
+@dataclass
+class ShardingPolicy:
+    tp_axis: str = "model"
+    dp_axes: Tuple[str, ...] = ("data",)
+    fsdp_axis: Optional[str] = "data"   # None disables FSDP
+    fsdp_min_size: int = 1 << 20        # leaves below this stay unsharded
+    #: filled by param_specs: paths whose TP rule degraded to replication
+    degraded: List[str] = field(default_factory=list)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _head_count(cfg, path: str) -> Optional[int]:
+    """Heads relevant to a projection (for head-boundary sharding)."""
+    if cfg is None:
+        return None
+    if re.search(r"mixer/w[q]", path) or "wq_b" in path:
+        if cfg.mla is not None:
+            return cfg.mla.n_heads
+        return cfg.attention.n_heads if cfg.attention else None
+    if re.search(r"mixer/w[kv]\b", path) or "wkv_b" in path:
+        if cfg.mla is not None:
+            return cfg.mla.n_heads
+        return cfg.attention.n_kv_heads if cfg.attention else None
+    if "mixer/wo" in path:
+        if cfg.mla is not None:
+            return cfg.mla.n_heads
+        return cfg.attention.n_heads if cfg.attention else None
+    return None
+
+
+def _tp_rule(path: str, shape: Tuple[int, ...], tp: int,
+             cfg) -> Optional[List[Optional[str]]]:
+    """Returns spec template over the *logical* (unstacked) dims, entries
+    "tp" where the model axis goes.  None = no TP opinion (replicate)."""
+    nd = len(shape)
+
+    def out_col():   # shard last (output) dim
+        t: List[Optional[str]] = [None] * nd
+        t[-1] = "tp"
+        return t
+
+    def in_row():    # shard second-to-last? no: first-of-matmul dims
+        t: List[Optional[str]] = [None] * nd
+        t[-2] = "tp"
+        return t
+
+    # attention projections: head-boundary aware
+    if re.search(r"mixer/(wq|wk|wv|wq_b|wkv_b)/w$", path):
+        heads = _head_count(cfg, path)
+        if heads is not None and heads % tp == 0 and shape[-1] % tp == 0:
+            return out_col()
+        return None
+    if re.search(r"mixer/wo/w$", path):
+        heads = _head_count(cfg, path)
+        if heads is not None and heads % tp == 0 and shape[-2] % tp == 0:
+            return in_row()
+        return None
+    if re.search(r"mixer/(wq_a|wkv_a)/w$", path):
+        return None  # small latent projections: replicated
+    # dense MLP
+    if re.search(r"ffn/(gate|up)/w$", path) and shape[-1] % tp == 0:
+        return out_col()
+    if re.search(r"ffn/down/w$", path) and shape[-2] % tp == 0:
+        return in_row()
+    # MoE expert stacks [E, d, f] / shared-expert fused MLP
+    if re.search(r"ffn/(gate|up|down)$", path) and nd >= 3:
+        if shape[-3] % tp == 0:
+            t: List[Optional[str]] = [None] * nd
+            t[-3] = "tp"
+            return t
+        return None
+    if re.search(r"ffn/shared/(gate|up)/w$", path) and shape[-1] % tp == 0:
+        return out_col()
+    if re.search(r"ffn/shared/down/w$", path) and shape[-2] % tp == 0:
+        return in_row()
+    if "router" in path:
+        return [None] * nd
+    # mamba (d_inner sharded)
+    if re.search(r"mixer/in_proj/w$", path) and shape[-1] % (2 * tp) == 0:
+        return out_col()
+    if re.search(r"mixer/(conv_w)$", path) and shape[-1] % tp == 0:
+        return out_col()
+    if re.search(r"mixer/(conv_b|D)$", path) and shape[-1] % tp == 0:
+        return out_col()
+    if re.search(r"mixer/dt_bias$", path) and shape[-1] % tp == 0:
+        return out_col()
+    if re.search(r"mixer/(x_proj|out_proj)/w$", path) and shape[-2] % tp == 0:
+        return in_row()
+    if re.search(r"mixer/A_log$", path) and shape[-2] % tp == 0:
+        return in_row()
+    if re.search(r"mixer/dt_proj/w$", path) and shape[-1] % tp == 0:
+        return out_col()
+    # rwkv6 (d sharded on projection outputs, head-aligned)
+    if re.search(r"mixer/(wr|wk|wv|wg)/w$", path) and shape[-1] % tp == 0:
+        return out_col()
+    if re.search(r"mixer/w_lora_b/w$", path) and shape[-1] % tp == 0:
+        return out_col()
+    if re.search(r"mixer/wo/w$", path) and shape[-2] % tp == 0:
+        return in_row()
+    if re.search(r"mixer/u$", path) and shape[-2] % tp == 0:
+        return in_row()
+    # embeddings / head: vocab-sharded
+    if path.endswith("embed/table") and shape[-2] % tp == 0:
+        return in_row()
+    if path.endswith("lm_head/w") and shape[-1] % tp == 0:
+        return out_col()
+    if "mtp/combine" in path:
+        return None
+    return None
+
+
+def param_specs(shapes: Any, policy: ShardingPolicy,
+                cfg=None) -> Any:
+    """Map a pytree of ShapeDtypeStructs (or arrays) to PartitionSpecs."""
+    tp_name = policy.tp_axis
+    mesh_axes = {tp_name}
+    if policy.fsdp_axis:
+        mesh_axes.add(policy.fsdp_axis)
+
+    def leaf_spec(path, leaf):
+        pstr = _path_str(path)
+        shape = tuple(leaf.shape)
+        stacked = int(pstr.startswith("stage"))  # leading scan dim
+        logical = shape[stacked:]
+        # mesh axis sizes from the policy context set at call time
+        tpl = _tp_rule(pstr, logical, policy._tp_size, cfg)
+        if tpl is None:
+            if any(k in pstr for k in ("mixer/", "ffn/", "embed", "lm_head")) \
+                    and len(logical) >= 2:
+                policy.degraded.append(pstr)
+            tpl = [None] * len(logical)
+        spec: List[Optional[str]] = [None] * stacked + [
+            tp_name if t == "tp" else None for t in tpl]
+        # FSDP: largest remaining unsharded dim of large leaves
+        if (policy.fsdp_axis and leaf.size >= policy.fsdp_min_size):
+            cands = [i for i in range(stacked, len(shape))
+                     if spec[i] is None
+                     and shape[i] % policy._fsdp_size == 0]
+            if cands:
+                best = max(cands, key=lambda i: shape[i])
+                spec[best] = policy.fsdp_axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, shapes)
+
+
+def batch_specs(shapes: Any, policy: ShardingPolicy) -> Any:
+    """Batch dims shard over all dp axes when divisible, else replicate."""
+    def leaf_spec(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        if b % policy._dp_size == 0:
+            return P(policy.dp_axes, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+    return jax.tree_util.tree_map_with_path(leaf_spec, shapes)
+
+
+def cache_specs(shapes: Any, policy: ShardingPolicy) -> Any:
+    """Decode caches: [L, B, S, (H, hd)] layout rules.
+
+    - batch (dim 1) over dp when divisible; else the sequence dim of KV
+      caches over dp (long_500k's B=1 case);
+    - KV head dim (dim 3 of 5-D caches) over tp when divisible — this
+      keeps the decode attention fully head-parallel so GSPMD never
+      re-shards (§Perf: f32 full-cache all-gathers otherwise).
+    """
+    def leaf_spec(path, leaf):
+        pstr = _path_str(path)
+        spec: List[Optional[str]] = [None] * leaf.ndim
+        kv_like = ("mixer/k" in pstr or "mixer/v" in pstr
+                   or "c_kv" in pstr or "k_pe" in pstr)
+        if leaf.ndim >= 2 and leaf.shape[1] % policy._dp_size == 0:
+            spec[1] = policy.dp_axes if len(policy.dp_axes) > 1 \
+                else policy.dp_axes[0]
+        elif kv_like and leaf.ndim >= 3 \
+                and leaf.shape[2] % policy._dp_size == 0:
+            spec[2] = policy.dp_axes if len(policy.dp_axes) > 1 \
+                else policy.dp_axes[0]
+        if (kv_like and leaf.ndim == 5
+                and leaf.shape[3] % policy._tp_size == 0):
+            spec[3] = policy.tp_axis
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(leaf_spec, shapes)
+
+
+def prepare(policy: ShardingPolicy, mesh: Mesh) -> ShardingPolicy:
+    """Bind mesh axis sizes (kept off the dataclass for hashability)."""
+    policy._tp_size = mesh.shape[policy.tp_axis]
+    policy._dp_size = 1
+    for a in policy.dp_axes:
+        policy._dp_size *= mesh.shape[a]
+    policy._fsdp_size = (mesh.shape[policy.fsdp_axis]
+                         if policy.fsdp_axis else 1)
+    return policy
+
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero_extend(spec: P, shape: Tuple[int, ...], axis: str,
+                size: int) -> P:
+    """ZeRO-1: extend a param spec with ``axis`` on the first dim that is
+    unsharded and divisible — used for optimizer-moment sharding."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (p, s) in enumerate(zip(parts, shape)):
+        if p is None and s % size == 0:
+            parts[i] = axis
+            return P(*parts)
+    return spec

@@ -1,0 +1,126 @@
+"""Straggler mitigation by speculative re-dispatch.
+
+Stateless tasks (the paper's §3.3 property) make duplication free of
+coordination: if a task exceeds an adaptive deadline (p50 x factor, or
+an absolute floor while quantiles warm up), clone it onto another
+worker; ``ElasticFuture`` keeps the first completion and ignores the
+rest.  This is the executor-level twin of backup tasks in MapReduce —
+and on a pod it is how the elastic batcher sheds slow serving replicas.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+from ..core.executor import BaseExecutor
+from ..core.futures import ElasticFuture
+
+__all__ = ["SpeculativeExecutor"]
+
+
+@dataclass
+class _Watch:
+    future: ElasticFuture
+    fn: Callable
+    args: tuple
+    kwargs: dict
+    submitted: float
+    duplicated: bool = False
+
+
+class SpeculativeExecutor:
+    """Wraps any executor with deadline-based task duplication."""
+
+    def __init__(self, inner: BaseExecutor, *,
+                 factor: float = 3.0, floor_s: float = 0.5,
+                 poll_s: float = 0.05, max_duplicates: int = 1):
+        self.inner = inner
+        self.factor = factor
+        self.floor_s = floor_s
+        self.poll_s = poll_s
+        self.max_duplicates = max_duplicates
+        self.duplicates = 0
+        self.wins_by_clone = 0
+        self._watches: List[_Watch] = []
+        self._durations: List[float] = []
+        self._lock = threading.Lock()
+        self._stop = False
+        self._thread = threading.Thread(target=self._watchdog, daemon=True)
+        self._thread.start()
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, fn: Callable, *args: Any, cost_hint: float = 1.0,
+               **kwargs: Any) -> ElasticFuture:
+        f = self.inner.submit(fn, *args, cost_hint=cost_hint, **kwargs)
+        with self._lock:
+            self._watches.append(_Watch(f, fn, args, kwargs,
+                                        time.monotonic()))
+        return f
+
+    @property
+    def stats(self):
+        return self.inner.stats
+
+    def pending(self) -> int:
+        return self.inner.pending()
+
+    def idle_capacity(self) -> int:
+        return self.inner.idle_capacity()
+
+    def shutdown(self, wait: bool = True) -> None:
+        self._stop = True
+        self.inner.shutdown(wait=wait)
+
+    # -- watchdog -------------------------------------------------------------
+    def _deadline(self) -> float:
+        with self._lock:
+            if len(self._durations) < 5:
+                return max(self.floor_s, 1e9 if not self._durations
+                           else self.factor * max(self._durations))
+            xs = sorted(self._durations)
+            p50 = xs[len(xs) // 2]
+            return max(self.floor_s, self.factor * p50)
+
+    def _watchdog(self) -> None:
+        while not self._stop:
+            time.sleep(self.poll_s)
+            now = time.monotonic()
+            deadline = self._deadline()
+            with self._lock:
+                live = []
+                to_clone = []
+                for w in self._watches:
+                    if w.future.done():
+                        self._durations.append(now - w.submitted)
+                        if len(self._durations) > 512:
+                            del self._durations[:256]
+                        continue
+                    if (not w.duplicated
+                            and now - w.submitted > deadline):
+                        w.duplicated = True
+                        to_clone.append(w)
+                    live.append(w)
+                self._watches = live
+            for w in to_clone:
+                if self.duplicates - self.wins_by_clone \
+                        >= self.max_duplicates * 8:
+                    continue  # bound clone storms
+                self.duplicates += 1
+                self._clone(w)
+
+    def _clone(self, w: _Watch) -> None:
+        target = w.future
+
+        def run_clone():
+            result = w.fn(*w.args, **w.kwargs)
+            if not target.done():
+                self.wins_by_clone += 1
+                target._set_result(result)
+            return result
+
+        try:
+            self.inner.submit(run_clone)
+        except RuntimeError:
+            pass  # executor shutting down

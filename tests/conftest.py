@@ -1,0 +1,19 @@
+import os
+import sys
+
+# tests must see exactly 1 device (the dry-run sets 512 in its OWN
+# process); guard against accidental inheritance.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings, HealthCheck  # noqa: E402
+
+settings.register_profile(
+    "repro",
+    max_examples=15,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow,
+                           HealthCheck.data_too_large],
+)
+settings.load_profile("repro")

@@ -1,0 +1,114 @@
+"""Adaptive controller (paper §5.2) + cost model (Eq. 3-8) tests."""
+import math
+
+from hypothesis import given, strategies as st
+
+from repro.core import (CostReport, LambdaPrice, OccupancyController,
+                        StagedController, TaskShape, VMPrice,
+                        emr_cluster_cost, price_performance,
+                        serverless_cost, vm_cost)
+from repro.core.futures import TaskRecord
+
+
+# -- StagedController: Listing 5 verbatim -------------------------------------
+
+def test_staged_ladder_follows_listing5():
+    c = StagedController()
+    assert c.update(10) == TaskShape(200, 50_000)          # phase 0
+    assert c.update(801) == TaskShape(50, 2_500_000)       # >800
+    assert c.update(1301) == TaskShape(5, 5_000_000)       # >1300
+    assert c.update(1099) == TaskShape(5, 2_500_000)       # <1100
+    assert c.update(99) == TaskShape(5, 1_000_000)         # <100
+    # ladder is one-way: further updates never change the shape
+    assert c.update(2000) == TaskShape(5, 1_000_000)
+    assert len(c.transitions) == 4
+
+
+def test_staged_no_spurious_transitions():
+    c = StagedController()
+    for active in (100, 500, 799, 800):  # never strictly above 800
+        assert c.update(active) == TaskShape(200, 50_000)
+
+
+# -- OccupancyController properties --------------------------------------------
+
+@given(st.integers(1, 2000))
+def test_occupancy_under_occupied_splits_wider(capacity):
+    c = OccupancyController(capacity=capacity)
+    s0 = c.init_shape
+    s1 = c.update(0)  # empty pool -> split wider, shorter tasks
+    assert s1.split_factor >= s0.split_factor
+    assert s1.iters <= s0.iters
+
+
+@given(st.integers(8, 2000))
+def test_occupancy_saturated_amortizes(capacity):
+    c = OccupancyController(capacity=capacity)
+    s0 = c.init_shape
+    s1 = c.update(capacity * 2)  # oversaturated
+    assert s1.split_factor <= s0.split_factor
+    assert s1.iters >= s0.iters
+
+
+@given(st.integers(1, 500), st.lists(st.integers(0, 1000), min_size=1,
+                                     max_size=50))
+def test_occupancy_respects_clamps(capacity, actives):
+    c = OccupancyController(capacity=capacity)
+    for a in actives:
+        s = c.update(a)
+        assert c.min_split <= s.split_factor <= c.max_split
+        assert c.min_iters <= s.iters <= c.max_iters
+
+
+# -- Cost model ---------------------------------------------------------------
+
+def _rec(duration, remote=True, attempts=1):
+    return TaskRecord(task_id=0, worker="w", submit_time=0.0,
+                      start_time=0.0, end_time=duration, cost_hint=1.0,
+                      remote=remote, attempts=attempts)
+
+
+def test_eq3_to_eq6_hand_computed():
+    # 10 remote tasks x 2.0s, memory 1769MB, client m5.xlarge, wall 20s
+    recs = [_rec(2.0) for _ in range(10)]
+    rep = serverless_cost(recs, wall_time_s=20.0)
+    lam = LambdaPrice()
+    assert math.isclose(rep.invocations, 10 * 0.0000002)
+    assert math.isclose(rep.execution,
+                        0.0000166667 * (1769 / 1024) * 20.0, rel_tol=1e-6)
+    assert math.isclose(rep.client, 0.192 / 3600 * 20.0, rel_tol=1e-9)
+    assert math.isclose(rep.total,
+                        rep.invocations + rep.execution + rep.client)
+
+
+def test_local_tasks_not_billed_as_invocations():
+    recs = [_rec(1.0, remote=False) for _ in range(5)]
+    rep = serverless_cost(recs, wall_time_s=5.0)
+    assert rep.invocations == 0.0
+    assert rep.execution == 0.0
+    assert rep.client > 0.0
+
+
+def test_retries_billed():
+    rep1 = serverless_cost([_rec(1.0, attempts=1)], wall_time_s=1.0)
+    rep3 = serverless_cost([_rec(1.0, attempts=3)], wall_time_s=1.0)
+    assert math.isclose(rep3.invocations, 3 * rep1.invocations)
+    assert rep3.execution > rep1.execution
+
+
+def test_eq8_emr_cost():
+    # 10 workers x 4.35 + master 0.48, one hour
+    rep = emr_cluster_cost(3600.0, workers=10)
+    assert math.isclose(rep.total, 10 * 4.35 + 0.48, rel_tol=1e-9)
+
+
+def test_vm_minimum_billing():
+    assert vm_cost(0.01, VMPrice.named("c5.12xlarge")).total \
+        == vm_cost(1.0, VMPrice.named("c5.12xlarge")).total
+
+
+@given(st.floats(0.1, 1e6), st.floats(1e-6, 10.0))
+def test_price_performance_scale_invariance(throughput, cost):
+    r = price_performance(throughput, CostReport(client=cost))
+    r2 = price_performance(2 * throughput, CostReport(client=cost))
+    assert math.isclose(r2, 2 * r, rel_tol=1e-9)

@@ -1,0 +1,61 @@
+"""Characterization metrics (paper §4.2, Table 2, Figs. 2-3)."""
+import math
+
+from hypothesis import given, strategies as st
+
+from repro.core import (characterize, coefficient_of_variation,
+                        duration_cdf, task_generation_rate)
+from repro.core.futures import TaskRecord
+
+
+def test_cv_known_values():
+    assert coefficient_of_variation([5.0, 5.0, 5.0]) == 0.0
+    # sigma of [1,3] (population) = 1; mean = 2 -> CV = 0.5
+    assert math.isclose(coefficient_of_variation([1.0, 3.0]), 0.5)
+
+
+@given(st.lists(st.floats(0.001, 1e3), min_size=2, max_size=100),
+       st.floats(0.01, 100.0))
+def test_cv_scale_invariant(xs, k):
+    # CV is unitless: scaling all durations leaves it unchanged
+    a = coefficient_of_variation(xs)
+    b = coefficient_of_variation([x * k for x in xs])
+    assert math.isclose(a, b, rel_tol=1e-6, abs_tol=1e-9)
+
+
+@given(st.lists(st.floats(0.0, 100.0), min_size=1, max_size=200))
+def test_cdf_monotone_and_bounded(xs):
+    cdf = duration_cdf(xs)
+    qs = [q for _, q in cdf]
+    vs = [v for v, _ in cdf]
+    assert qs == sorted(qs)
+    assert vs == sorted(vs)
+    assert 0.0 <= qs[0] and qs[-1] <= 1.0
+
+
+def test_generation_rate_buckets():
+    rate = task_generation_rate([0.0, 0.1, 0.2, 1.5, 1.9, 3.2],
+                                bucket_s=1.0)
+    assert dict(rate) == {0.0: 3, 1.0: 2, 3.0: 1}
+
+
+def test_characterize_summary():
+    recs = [TaskRecord(task_id=i, worker="w", submit_time=0.0,
+                       start_time=0.0, end_time=float(i + 1),
+                       cost_hint=1.0, remote=True) for i in range(10)]
+    ch = characterize(recs)
+    assert ch.n_tasks == 10
+    assert ch.max_duration == 10.0
+    assert ch.p50 <= ch.p99 <= ch.max_duration
+    assert ch.cv > 0
+
+
+def test_paper_ordering_ms_most_imbalanced():
+    """Table 2's qualitative ordering: C_L(MS) > C_L(UTS) > C_L(BC) —
+    checked on synthetic duration mixes with those profiles."""
+    bc = [8.0 + 0.5 * (i % 5) for i in range(100)]       # homogeneous
+    uts = [0.001 * (1 + i % 100) * 20 for i in range(100)]  # uniform-ish
+    ms = [0.01] * 90 + [10.0] * 9 + [25.0]               # heavy tail
+    assert coefficient_of_variation(ms) \
+        > coefficient_of_variation(uts) \
+        > coefficient_of_variation(bc)

@@ -1,0 +1,129 @@
+"""Checkpoint roundtrip + elastic restart (fault tolerance)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_pytree, save_pytree)
+from repro.runtime import (ElasticRunner, FailureInjector,
+                           SpeculativeExecutor, rescale_batch_schedule)
+from repro.core import ElasticExecutor
+import time
+
+
+def _tree():
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "stats": {"b16": jnp.ones((5,), jnp.bfloat16) * 1.5,
+                  "step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    tree = _tree()
+    d = str(tmp_path / "ck")
+    save_pytree(tree, d)
+    got = restore_pytree(tree, d)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a, np.float32),
+                              np.asarray(b, np.float32))
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    d = str(tmp_path / "ck")
+    save_pytree({"w": jnp.zeros((2, 2))}, d)
+    with pytest.raises(ValueError):
+        restore_pytree({"w": jnp.zeros((3, 2))}, d)
+
+
+def test_manager_retention_and_latest(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (10, 20, 30):
+        m.save(s, {"w": jnp.full((2,), s, jnp.float32)})
+    assert latest_step(str(tmp_path)) == 30
+    dirs = sorted(os.listdir(tmp_path))
+    assert dirs == ["step_20", "step_30"]  # keep=2 retention
+    step, tree = m.restore_latest({"w": jnp.zeros((2,))})
+    assert step == 30
+    assert float(tree["w"][0]) == 30.0
+
+
+def test_async_save_then_restore(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    m.save(1, {"w": jnp.ones((4,))})
+    m.wait()
+    step, tree = m.restore_latest({"w": jnp.zeros((4,))})
+    assert step == 1
+
+
+def test_elastic_runner_failure_recovery(tmp_path):
+    """Lose 'devices' mid-run; final state must equal the no-failure
+    run (restart from checkpoint + deterministic data replay)."""
+    batches = [np.float32(i + 1) for i in range(40)]
+
+    def make_mesh(n_data):
+        return n_data
+
+    def make_state(mesh):
+        return jnp.float32(0.0)
+
+    def make_step(mesh):
+        return lambda s, b: s + b  # running sum: order-sensitive
+
+    baseline = ElasticRunner(
+        make_mesh=make_mesh, make_state=make_state, make_step=make_step,
+        data_shards=4, checkpoint_every=5,
+        manager=CheckpointManager(str(tmp_path / "a"), keep=2,
+                                  async_save=False),
+    ).run(batches, 20)
+
+    failing = ElasticRunner(
+        make_mesh=make_mesh, make_state=make_state, make_step=make_step,
+        data_shards=4, checkpoint_every=5,
+        injector=FailureInjector({12: 1, 17: 1}),
+        manager=CheckpointManager(str(tmp_path / "b"), keep=2,
+                                  async_save=False),
+    )
+    out = failing.run(batches, 20)
+    assert float(out) == float(baseline)
+    assert len(failing.events) == 2
+    assert failing.events[0]["n_data"] == 3
+    assert failing.events[1]["n_data"] == 2
+
+
+def test_rescale_batch_schedule():
+    assert rescale_batch_schedule(256, 16) == 16
+    assert rescale_batch_schedule(256, 8) == 32
+    with pytest.raises(ValueError):
+        rescale_batch_schedule(256, 7)
+
+
+def test_speculative_executor_mitigates_straggler():
+    """One deterministic straggler: the clone finishes first."""
+    calls = {"n": 0}
+
+    def task(i):
+        # first executions of task 13 hang; clones run fast
+        if i == 13 and calls["n"] == 0:
+            calls["n"] += 1
+            time.sleep(3.0)
+            return i
+        time.sleep(0.01)
+        return i
+
+    inner = ElasticExecutor(max_concurrency=4, invoke_overhead=0.0,
+                            invoke_rate_limit=None)
+    spec = SpeculativeExecutor(inner, factor=3.0, floor_s=0.2,
+                               poll_s=0.02)
+    t0 = time.monotonic()
+    fs = [spec.submit(task, i) for i in range(16)]
+    results = sorted(f.result(timeout=10) for f in fs)
+    wall = time.monotonic() - t0
+    assert results == list(range(16))
+    assert spec.duplicates >= 1
+    assert wall < 2.5  # finished before the 3s straggler
+    spec.shutdown(wait=False)

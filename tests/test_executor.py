@@ -1,0 +1,109 @@
+"""Executor middleware semantics (paper §3.1/§3.2)."""
+import time
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (ElasticExecutor, FunctionThrottledError,
+                        HybridExecutor, LocalExecutor, as_completed)
+
+
+def test_results_round_trip():
+    with ElasticExecutor(max_concurrency=4, invoke_overhead=0.0,
+                         invoke_rate_limit=None) as ex:
+        futures = [ex.submit(lambda i=i: i * i) for i in range(50)]
+        assert sorted(f.result() for f in futures) \
+            == sorted(i * i for i in range(50))
+
+
+def test_none_task_rejected():
+    ex = LocalExecutor(2)
+    with pytest.raises(TypeError):
+        ex.submit(None)
+    ex.shutdown()
+
+
+def test_concurrency_limit_enforced():
+    with ElasticExecutor(max_concurrency=3, invoke_overhead=0.0,
+                         invoke_rate_limit=None) as ex:
+        fs = [ex.submit(lambda: time.sleep(0.05)) for _ in range(12)]
+        for f in fs:
+            f.result()
+        assert ex.stats.peak_concurrency <= 3
+        assert ex.stats.completed == 12
+
+
+def test_throttle_reject_mode():
+    ex = ElasticExecutor(max_concurrency=1, invoke_overhead=0.0,
+                         invoke_rate_limit=None, throttle_mode="reject")
+    f1 = ex.submit(lambda: time.sleep(0.2))
+    with pytest.raises(FunctionThrottledError):
+        for _ in range(10):
+            ex.submit(lambda: 1)
+    f1.result()
+    ex.shutdown()
+
+
+def test_retries_on_injected_failure():
+    # failure_rate high but max_attempts generous: everything completes
+    with ElasticExecutor(max_concurrency=2, invoke_overhead=0.0,
+                         invoke_rate_limit=None, failure_rate=0.4,
+                         max_attempts=50, seed=7) as ex:
+        fs = [ex.submit(lambda i=i: i) for i in range(20)]
+        assert sorted(f.result() for f in fs) == list(range(20))
+        assert ex.stats.retries > 0
+        # every retry is billed as an invocation (stateless re-invoke)
+        assert ex.stats.invocations > ex.stats.submitted
+
+
+def test_as_completed_yields_all():
+    with LocalExecutor(4, invoke_overhead=0.0) as ex:
+        fs = [ex.submit(lambda i=i: (time.sleep(0.01 * (i % 3)), i)[1])
+              for i in range(9)]
+        seen = {f.result() for f in as_completed(fs, timeout=10)}
+        assert seen == set(range(9))
+
+
+def test_task_records_have_timing():
+    with LocalExecutor(2, invoke_overhead=0.0) as ex:
+        fs = [ex.submit(time.sleep, 0.01) for _ in range(4)]
+        [f.result() for f in fs]
+        assert len(ex.stats.records) == 4
+        for r in ex.stats.records:
+            assert r.duration >= 0.009
+            assert r.queue_delay >= 0.0
+            assert not r.remote  # local pool
+
+
+def test_hybrid_local_first_spill(monkeypatch):
+    hy = HybridExecutor(local_concurrency=2, elastic_concurrency=16)
+    fs = [hy.submit(time.sleep, 0.05) for _ in range(10)]
+    [f.result() for f in fs]
+    counts = hy.placement_counts()
+    # paper Listing 1: local while idle, elastic for the overflow
+    assert counts["local"] >= 2
+    assert counts["elastic"] >= 1
+    assert counts["local"] + counts["elastic"] == 10
+    hy.shutdown()
+
+
+def test_hybrid_all_local_when_capacity():
+    hy = HybridExecutor(local_concurrency=8, elastic_concurrency=8)
+    fs = [hy.submit(lambda: 1) for _ in range(4)]
+    [f.result() for f in fs]
+    assert hy.placement_counts()["elastic"] == 0
+    hy.shutdown()
+
+
+@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=40))
+def test_map_order_preserved(xs):
+    with LocalExecutor(4, invoke_overhead=0.0) as ex:
+        assert ex.map(lambda x: x + 1, xs) == [x + 1 for x in xs]
+
+
+def test_invocation_overhead_accounted():
+    with ElasticExecutor(max_concurrency=1, invoke_overhead=0.02,
+                         invoke_rate_limit=None) as ex:
+        t0 = time.monotonic()
+        ex.submit(lambda: None).result()
+        assert time.monotonic() - t0 >= 0.02

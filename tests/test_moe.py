@@ -1,0 +1,113 @@
+"""MoE dispatch invariants (token-choice, capacity, combine)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import MoEConfig
+from repro.models.moe import _route, init_moe, moe_block_local
+
+CFG = MoEConfig(n_experts=8, top_k=2, d_expert=16, n_shared=0,
+                capacity_factor=8.0)
+D = 12
+
+
+def _setup(t, cfg=CFG, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = init_moe(key, D, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (t, D),
+                          jnp.float32)
+    return params, x
+
+
+def test_route_weights_normalized():
+    params, x = _setup(64)
+    w, e, aux = _route(params["router"]["w"], x, CFG)
+    assert w.shape == (64, CFG.top_k)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert int(e.min()) >= 0 and int(e.max()) < CFG.n_experts
+    assert float(aux) >= 1.0 - 1e-5  # E*sum(f*p) >= 1 by Cauchy-Schwarz
+
+
+def test_counts_match_routing():
+    params, x = _setup(128)
+    _, top_e, _ = _route(params["router"]["w"], x, CFG)
+    out, aux, counts = moe_block_local(params, x, CFG, n_shards=1,
+                                       shard_ix=jnp.int32(0),
+                                       tp_axis=None)
+    hist = np.bincount(np.asarray(top_e).ravel(),
+                       minlength=CFG.n_experts)
+    np.testing.assert_array_equal(np.asarray(counts), hist)
+    assert int(counts.sum()) == 128 * CFG.top_k
+
+
+def test_high_capacity_equals_dense_mixture():
+    """With capacity >= T*k no token drops: output must equal the
+    explicit dense mixture sum_k w_k * FFN_{e_k}(x)."""
+    params, x = _setup(32)
+    w, e, _ = _route(params["router"]["w"], x, CFG)
+    out, _, _ = moe_block_local(params, x, CFG, n_shards=1,
+                                shard_ix=jnp.int32(0), tp_axis=None)
+    gate, up, down = (np.asarray(params[k]) for k in ("gate", "up",
+                                                      "down"))
+    xn = np.asarray(x)
+    expected = np.zeros_like(xn)
+    for t in range(32):
+        for k in range(CFG.top_k):
+            ex = int(e[t, k])
+            h = xn[t] @ gate[ex]
+            h = (h / (1 + np.exp(-h))) * (xn[t] @ up[ex])  # silu gate
+            expected[t] += float(w[t, k]) * (h @ down[ex])
+    np.testing.assert_allclose(np.asarray(out), expected, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_capacity_drops_reduce_output_norm():
+    tight = dataclasses.replace(CFG, capacity_factor=0.25)
+    params, x = _setup(256)
+    full, _, _ = moe_block_local(params, x, CFG, n_shards=1,
+                                 shard_ix=jnp.int32(0), tp_axis=None)
+    dropped, _, counts = moe_block_local(params, x, tight, n_shards=1,
+                                         shard_ix=jnp.int32(0),
+                                         tp_axis=None)
+    # some tokens lost their expert -> strictly less mass, never more
+    assert float(jnp.linalg.norm(dropped)) \
+        < float(jnp.linalg.norm(full))
+
+
+def test_expert_shard_partition_sums_to_whole():
+    """Replicated dispatch: sum of per-shard partial outputs over all
+    shards == single-shard output (the psum the shard_map performs)."""
+    params, x = _setup(64)
+    whole, _, _ = moe_block_local(params, x, CFG, n_shards=1,
+                                  shard_ix=jnp.int32(0), tp_axis=None)
+    e_loc = CFG.n_experts // 4
+    acc = jnp.zeros_like(whole)
+    for s in range(4):
+        shard_params = {
+            "router": params["router"],
+            "gate": params["gate"][s * e_loc:(s + 1) * e_loc],
+            "up": params["up"][s * e_loc:(s + 1) * e_loc],
+            "down": params["down"][s * e_loc:(s + 1) * e_loc],
+        }
+        part, _, _ = moe_block_local(shard_params, x, CFG, n_shards=4,
+                                     shard_ix=jnp.int32(s), tp_axis=None)
+        acc = acc + part
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(whole),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(4, 96), st.integers(1, 4))
+@settings(max_examples=10)
+def test_combine_is_convex_in_magnitude(t, k):
+    cfg = dataclasses.replace(CFG, top_k=k)
+    params, x = _setup(t, cfg)
+    out, aux, counts = moe_block_local(params, x, cfg, n_shards=1,
+                                       shard_ix=jnp.int32(0),
+                                       tp_axis=None)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out).all())
+    assert int(counts.sum()) <= t * k

@@ -1,0 +1,110 @@
+"""Sharding rule engine: TP assignment, degradation, FSDP layering."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.specs import abstract_params
+from repro.runtime.sharding import (ShardingPolicy, batch_specs,
+                                    cache_specs, param_specs, zero_extend)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def _policy(tp=16, data=16, fsdp=True):
+    p = ShardingPolicy(fsdp_axis="data" if fsdp else None)
+    p._tp_size = tp
+    p._dp_size = data
+    p._fsdp_size = data
+    return p
+
+
+def _flat(tree):
+    return {
+        "/".join(str(getattr(k, "key", k)) for k in path): v
+        for path, v in jax.tree_util.tree_flatten_with_path(tree)[0]
+    }
+
+
+def test_glm4_specs_head_aligned():
+    cfg = get_config("glm4-9b")
+    shapes = abstract_params(cfg)
+    policy = _policy()
+    specs = _flat(param_specs(shapes, policy, cfg))
+    # 32 q heads % 16 == 0 -> wq sharded on output dim
+    assert specs["stage0/block0/mixer/wq/w"][-1] == "model"
+    # 2 kv heads % 16 != 0 -> wk/wv replicated on TP (degraded)
+    assert specs["stage0/block0/mixer/wk/w"][-1] != "model"
+    assert any("wk" in d for d in policy.degraded)
+    # mlp sharded
+    assert specs["stage0/block0/ffn/up/w"][-1] == "model"
+    assert specs["stage0/block0/ffn/down/w"][-2] == "model"
+    # vocab-sharded embedding
+    assert specs["embed/table"][0] == "model"
+
+
+def test_gemma3_tiny_heads_degrade():
+    cfg = get_config("gemma3-1b")
+    shapes = abstract_params(cfg)
+    policy = _policy()
+    specs = _flat(param_specs(shapes, policy, cfg))
+    # 4 heads cannot shard 16-way: all attention projections replicate
+    assert specs["stage0/block0/mixer/wq/w"][-1] != "model"
+    # but the MLP still shards (6912 % 16 == 0)
+    assert specs["stage0/block0/ffn/up/w"][-1] == "model"
+
+
+def test_moe_expert_stacks_sharded():
+    cfg = get_config("deepseek-v3-671b")
+    shapes = abstract_params(cfg)
+    specs = _flat(param_specs(shapes, _policy(), cfg))
+    # experts [L, E, d, f]: E -> model, plus FSDP on a remaining dim
+    assert specs["stage1/block0/ffn/gate"][1] == "model"
+    assert "data" in tuple(specs["stage1/block0/ffn/gate"])
+
+
+def test_no_axis_used_twice():
+    for arch in ("glm4-9b", "deepseek-v3-671b", "jamba-v0.1-52b",
+                 "rwkv6-1.6b"):
+        cfg = get_config(arch)
+        specs = _flat(param_specs(abstract_params(cfg), _policy(), cfg))
+        for path, spec in specs.items():
+            axes = [a for a in spec if a is not None]
+            flat = []
+            for a in axes:
+                flat.extend(a if isinstance(a, tuple) else (a,))
+            assert len(flat) == len(set(flat)), (path, spec)
+
+
+def test_batch_specs_divisibility():
+    policy = _policy()
+    sds = jax.ShapeDtypeStruct
+    ok = batch_specs({"tokens": sds((256, 128), jnp.int32)}, policy)
+    assert ok["tokens"][0] in ("data", ("data",))
+    bad = batch_specs({"tokens": sds((1, 128), jnp.int32)}, policy)
+    assert bad["tokens"][0] is None
+
+
+def test_cache_specs_batch_then_seq():
+    policy = _policy()
+    sds = jax.ShapeDtypeStruct
+    # [L, B, S, H, D] with B divisible -> batch sharded
+    spec = cache_specs({"mixer": {"k": sds((4, 128, 1024, 2, 64),
+                                           jnp.bfloat16)}}, policy)
+    assert spec["mixer"]["k"][1] == "data"
+    # B=1 -> falls back to sharding the seq dim of KV caches
+    spec = cache_specs({"mixer": {"k": sds((4, 1, 1024, 2, 64),
+                                           jnp.bfloat16)}}, policy)
+    assert spec["mixer"]["k"][2] == "data"
+
+
+def test_zero_extend():
+    assert zero_extend(P(None, "model"), (64, 32), "data", 16) \
+        == P("data", "model")
+    # nothing divisible -> unchanged
+    assert zero_extend(P(None,), (7,), "data", 16) == P(None,)

@@ -1,0 +1,50 @@
+"""Virtual-time pool simulator (core.simpool) — Fig 4's harness."""
+from repro.algorithms.uts import UTSParams, uts_sequential
+from repro.core import StagedController, TaskShape
+from repro.core.adaptive import Stage
+from repro.core.simpool import simulate_uts_pool
+
+P = UTSParams(seed=19, b0=4.0, max_depth=7, chunk=1024)
+
+
+def test_simulated_traversal_is_exact():
+    expected = uts_sequential(P)
+    r = simulate_uts_pool(P, workers=64, overhead_s=1e-3,
+                          alpha_s_per_node=1e-6,
+                          shape=TaskShape(8, 500))
+    assert r.count == expected
+    assert r.peak_concurrency <= 64
+    assert r.virtual_time_s > 0
+
+
+def test_more_workers_never_slower():
+    shape = TaskShape(16, 300)
+    t_narrow = simulate_uts_pool(P, workers=4, overhead_s=1e-3,
+                                 alpha_s_per_node=1e-6,
+                                 shape=shape).virtual_time_s
+    t_wide = simulate_uts_pool(P, workers=256, overhead_s=1e-3,
+                               alpha_s_per_node=1e-6,
+                               shape=shape).virtual_time_s
+    assert t_wide <= t_narrow
+
+
+def test_controller_reacts_in_simulation():
+    ctrl = StagedController(initial=TaskShape(32, 200), stages=[
+        Stage(16, "above", TaskShape(4, 2000)),
+        Stage(8, "below", TaskShape(4, 500)),
+    ])
+    r = simulate_uts_pool(P, workers=64, overhead_s=1e-3,
+                          alpha_s_per_node=1e-6,
+                          shape=TaskShape(32, 200), controller=ctrl)
+    assert r.count == uts_sequential(P)
+    assert ctrl.step >= 1  # at least one stage transition fired
+
+
+def test_makespan_bounded_below_by_work_and_critical_path():
+    """Virtual makespan >= total-work / workers and >= one overhead."""
+    r = simulate_uts_pool(P, workers=8, overhead_s=2e-3,
+                          alpha_s_per_node=1e-6,
+                          shape=TaskShape(8, 400))
+    work = r.count * 1e-6 + r.tasks * 2e-3
+    assert r.virtual_time_s >= work / 8 * 0.99
+    assert r.virtual_time_s >= 2e-3

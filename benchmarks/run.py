@@ -18,13 +18,13 @@ import time
 import numpy as np
 
 from repro.algorithms import (MSParams, RMATParams, UTSParams,
-                              betweenness_centrality, bc_single_node,
-                              mariani_silver, naive_render, rmat_graph,
-                              uts_parallel, uts_sequential)
-from repro.core import (ElasticExecutor, HybridExecutor, LocalExecutor,
-                        StagedController, TaskShape, VMPrice,
-                        characterize, emr_cluster_cost,
-                        price_performance, serverless_cost, vm_cost)
+                              bc_single_node, bc_spec, ms_spec,
+                              naive_render, rmat_graph, uts_sequential,
+                              uts_spec)
+from repro.core import (StagedController, TaskShape, VMPrice,
+                        characterize, emr_cluster_cost, make_pool,
+                        price_performance, run_irregular,
+                        serverless_cost, vm_cost)
 from repro.core.adaptive import Stage as CtrlStage
 from repro.configs.paper_workloads import (BC_SCALED, BC_SCALED_TASKS,
                                            MS_SCALED, UTS_SCALED)
@@ -66,19 +66,20 @@ def table2_characterization() -> None:
     t0 = time.monotonic()
     cvs = {}
 
-    def measured(fn):
-        fn(LocalExecutor(1, invoke_overhead=0.0))       # warm
-        ex = LocalExecutor(1, invoke_overhead=0.0)
-        fn(ex)
-        ex.shutdown()
-        return characterize(ex.stats.records).cv
+    def measured(spec, **kw):
+        with make_pool("local", max_concurrency=1,
+                       invoke_overhead=0.0) as warm:
+            run_irregular(warm, spec, **kw)             # warm jit caches
+        with make_pool("local", max_concurrency=1,
+                       invoke_overhead=0.0) as ex:
+            run_irregular(ex, spec, **kw)
+            return characterize(ex.records).cv
 
-    cvs["uts"] = measured(lambda ex: uts_parallel(
-        ex, UTSParams(seed=19, b0=4.0, max_depth=9, chunk=128),
-        shape=TaskShape(6, 300)))
-    cvs["ms"] = measured(lambda ex: mariani_silver(ex, MS_SCALED))
-    cvs["bc"] = measured(lambda ex: betweenness_centrality(
-        ex, BC_SCALED, n_tasks=BC_SCALED_TASKS))
+    cvs["uts"] = measured(
+        uts_spec(UTSParams(seed=19, b0=4.0, max_depth=9, chunk=128)),
+        shape=TaskShape(6, 300))
+    cvs["ms"] = measured(ms_spec(MS_SCALED))
+    cvs["bc"] = measured(bc_spec(BC_SCALED, n_tasks=BC_SCALED_TASKS))
     wall = time.monotonic() - t0
     emit("table2_characterization", wall * 1e6,
          cv_uts=round(cvs["uts"], 3), cv_ms=round(cvs["ms"], 3),
@@ -93,14 +94,15 @@ def table2_characterization() -> None:
 def table4_invocation_overheads() -> None:
     """Avg overhead: elastic (FaaS-modelled) vs local thread."""
     n = 200
-    with ElasticExecutor(max_concurrency=1, invoke_overhead=13e-3,
-                         invoke_rate_limit=None) as ex:
+    with make_pool("elastic", max_concurrency=1, invoke_overhead=13e-3,
+                   invoke_rate_limit=None) as ex:
         ex.submit(lambda: None).result()  # warm
         t0 = time.monotonic()
         for _ in range(20):
             ex.submit(lambda: None).result()
         remote_us = (time.monotonic() - t0) / 20 * 1e6
-    with LocalExecutor(1, invoke_overhead=18e-6) as ex:
+    with make_pool("local", max_concurrency=1,
+                   invoke_overhead=18e-6) as ex:
         ex.submit(lambda: None).result()
         t0 = time.monotonic()
         for _ in range(n):
@@ -121,13 +123,13 @@ def table5_uts_performance() -> None:
     t_seq = time.monotonic() - t0
     results = {"sequential": (t_seq, 1)}
     for name, width in (("pool4", 4), ("pool8", 8)):
-        with ElasticExecutor(max_concurrency=width,
-                             invoke_overhead=0.0005,
-                             invoke_rate_limit=None) as ex:
+        with make_pool("elastic", max_concurrency=width,
+                       invoke_overhead=0.0005,
+                       invoke_rate_limit=None) as ex:
             t0 = time.monotonic()
-            r = uts_parallel(ex, p, shape=TaskShape(8, 4000))
+            r = run_irregular(ex, uts_spec(p), shape=TaskShape(8, 4000))
             results[name] = (time.monotonic() - t0, width)
-            assert r.count == total
+            assert r.output == total
     seq_tput = total / results["sequential"][0]
     derived = {"nodes": total,
                "seq_Mnodes_s": round(seq_tput / 1e6, 2)}
@@ -158,18 +160,20 @@ def fig4_dynamic_optimization() -> None:
     p = UTSParams(seed=19, b0=4.0, max_depth=10, chunk=2048)
 
     def run_static():
-        with ElasticExecutor(max_concurrency=16, invoke_overhead=0.001,
-                             invoke_rate_limit=None) as ex:
+        with make_pool("elastic", max_concurrency=16,
+                       invoke_overhead=0.001,
+                       invoke_rate_limit=None) as ex:
             t0 = time.monotonic()
-            r = uts_parallel(ex, p, shape=TaskShape(4, 1000))
+            r = run_irregular(ex, uts_spec(p), shape=TaskShape(4, 1000))
             return time.monotonic() - t0, r
 
     def run_dyn():
-        with ElasticExecutor(max_concurrency=16, invoke_overhead=0.001,
-                             invoke_rate_limit=None) as ex:
+        with make_pool("elastic", max_concurrency=16,
+                       invoke_overhead=0.001,
+                       invoke_rate_limit=None) as ex:
             t0 = time.monotonic()
-            r = uts_parallel(ex, p, shape=TaskShape(32, 500),
-                             controller=_scaled_controller())
+            r = run_irregular(ex, uts_spec(p), shape=TaskShape(32, 500),
+                              controller=_scaled_controller())
             return time.monotonic() - t0, r
 
     run_static()  # warm jit caches
@@ -178,7 +182,7 @@ def fig4_dynamic_optimization() -> None:
     t_static = sorted(t for t, _ in statics)[1]      # median of 3
     t_dyn = sorted(t for t, _ in dyns)[1]
     r_static, r_dyn = statics[0][1], dyns[0][1]
-    assert r_static.count == r_dyn.count
+    assert r_static.output == r_dyn.output
     emit("fig4_dynamic_optimization", t_dyn * 1e6,
          t_static_s=round(t_static, 3), t_dynamic_s=round(t_dyn, 3),
          improvement_pct=round(100 * (1 - t_dyn / t_static), 1),
@@ -226,20 +230,19 @@ def fig4_dynamic_optimization_sim() -> None:
 def fig5_table6_mariani_silver() -> None:
     p = MS_SCALED
     runs = {}
-    with LocalExecutor(2, invoke_overhead=0.0) as ex:   # "parallel VM"
-        t0 = time.monotonic()
-        mariani_silver(ex, p)
-        runs["parallel"] = (time.monotonic() - t0, None)
-    with ElasticExecutor(max_concurrency=16, invoke_overhead=0.002,
-                         invoke_rate_limit=None) as ex:
-        t0 = time.monotonic()
-        mariani_silver(ex, p)
-        runs["serverless"] = (time.monotonic() - t0, ex.stats.records)
-    with HybridExecutor(local_concurrency=2,
-                        elastic_concurrency=16) as hy:
-        t0 = time.monotonic()
-        mariani_silver(hy, p)
-        runs["hybrid"] = (time.monotonic() - t0, hy.records)
+    pools = (("parallel", "local",
+              dict(max_concurrency=2, invoke_overhead=0.0)),
+             ("serverless", "elastic",
+              dict(max_concurrency=16, invoke_overhead=0.002,
+                   invoke_rate_limit=None)),
+             ("hybrid", "hybrid",
+              dict(local_concurrency=2, elastic_concurrency=16)))
+    for name, kind, cfg in pools:
+        with make_pool(kind, **cfg) as pool:
+            t0 = time.monotonic()
+            run_irregular(pool, ms_spec(p))
+            recs = None if kind == "local" else pool.records
+            runs[name] = (time.monotonic() - t0, recs)
 
     mp = p.width * p.height / 1e6
     derived = {}
@@ -265,14 +268,14 @@ def fig6_bc_scaling() -> None:
     derived = {}
     wall8 = 0.0
     for width in (2, 4, 8):
-        with ElasticExecutor(max_concurrency=width,
-                             invoke_overhead=0.001,
-                             invoke_rate_limit=None) as ex:
+        with make_pool("elastic", max_concurrency=width,
+                       invoke_overhead=0.001,
+                       invoke_rate_limit=None) as ex:
             t0 = time.monotonic()
-            res = betweenness_centrality(ex, p, n_tasks=BC_SCALED_TASKS,
-                                         regenerate_graph=True)
+            res = run_irregular(ex, bc_spec(p, n_tasks=BC_SCALED_TASKS,
+                                            regenerate_graph=True))
             wall = time.monotonic() - t0
-        assert np.allclose(res.betweenness, expected, rtol=1e-4,
+        assert np.allclose(res.output, expected, rtol=1e-4,
                            atol=1e-3)
         derived[f"w{width}_s"] = round(wall, 3)
         if width == 8:
@@ -286,30 +289,30 @@ def fig6_bc_scaling() -> None:
 def fig7_9_cost_performance() -> None:
     p = UTS_SCALED
     # serverless (static)
-    with ElasticExecutor(max_concurrency=16, invoke_overhead=0.001,
-                         invoke_rate_limit=None) as ex:
+    with make_pool("elastic", max_concurrency=16, invoke_overhead=0.001,
+                   invoke_rate_limit=None) as ex:
         t0 = time.monotonic()
-        r_st = uts_parallel(ex, p, shape=TaskShape(4, 1000))
+        r_st = run_irregular(ex, uts_spec(p), shape=TaskShape(4, 1000))
         wall_st = time.monotonic() - t0
-        cost_st = serverless_cost(ex.stats.records, wall_time_s=wall_st)
+        cost_st = serverless_cost(ex.records, wall_time_s=wall_st)
     # serverless (dynamic, Listing 5 scaled)
-    with ElasticExecutor(max_concurrency=16, invoke_overhead=0.001,
-                         invoke_rate_limit=None) as ex:
+    with make_pool("elastic", max_concurrency=16, invoke_overhead=0.001,
+                   invoke_rate_limit=None) as ex:
         t0 = time.monotonic()
-        r_dy = uts_parallel(ex, p, shape=TaskShape(32, 500),
-                            controller=_scaled_controller())
+        r_dy = run_irregular(ex, uts_spec(p), shape=TaskShape(32, 500),
+                             controller=_scaled_controller())
         wall_dy = time.monotonic() - t0
-        cost_dy = serverless_cost(ex.stats.records, wall_time_s=wall_dy)
+        cost_dy = serverless_cost(ex.records, wall_time_s=wall_dy)
     # "VM" (narrow local pool) and EMR-style cluster pricing on its time
-    with LocalExecutor(2, invoke_overhead=0.0) as ex:
+    with make_pool("local", max_concurrency=2, invoke_overhead=0.0) as ex:
         t0 = time.monotonic()
-        r_vm = uts_parallel(ex, p, shape=TaskShape(4, 4000))
+        r_vm = run_irregular(ex, uts_spec(p), shape=TaskShape(4, 4000))
         wall_vm = time.monotonic() - t0
     cost_vm = vm_cost(wall_vm, VMPrice.named("c5.24xlarge"))
     cost_emr = emr_cluster_cost(wall_vm, workers=2)
 
-    assert r_st.count == r_dy.count == r_vm.count
-    nodes = r_st.count
+    assert r_st.output == r_dy.output == r_vm.output
+    nodes = r_st.output
     emit("fig7_9_cost_performance", wall_dy * 1e6,
          nodes=nodes,
          serverless_static_s=round(wall_st, 3),

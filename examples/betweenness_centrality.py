@@ -11,22 +11,20 @@ import time
 import networkx as nx
 import numpy as np
 
-from repro.algorithms import (RMATParams, betweenness_centrality,
-                              rmat_graph)
-from repro.core import ElasticExecutor, characterize
+from repro.algorithms import RMATParams, bc_spec, rmat_graph
+from repro.core import characterize, make_pool, run_irregular
 
 params = RMATParams(scale=8, edge_factor=8, seed=2)
 adj = rmat_graph(params)
 print(f"R-MAT graph: {params.n_vertices} vertices, "
       f"{int(adj.sum())} edges (a={params.a}, skewed)")
 
-with ElasticExecutor(max_concurrency=8, invoke_overhead=1e-3,
-                     invoke_rate_limit=None) as pool:
-    t0 = time.monotonic()
-    res = betweenness_centrality(pool, params, n_tasks=16,
-                                 regenerate_graph=True)
-    wall = time.monotonic() - t0
-    ch = characterize(pool.stats.records)
+with make_pool("elastic", max_concurrency=8, invoke_overhead=1e-3,
+               invoke_rate_limit=None) as pool:
+    res = run_irregular(pool, bc_spec(params, n_tasks=16,
+                                      regenerate_graph=True))
+    wall = res.wall_time_s
+    ch = characterize(pool.records)
 
 print(f"our BC: {wall:.2f}s over {res.tasks} tasks "
       f"(each re-generates the graph, paper Listing 4 line 44)")
@@ -39,10 +37,10 @@ g = nx.from_numpy_array(adj, create_using=nx.DiGraph)
 ref = nx.betweenness_centrality(g, normalized=False)
 ref_arr = np.array([ref[i] for i in range(adj.shape[0])])
 print(f"  networkx: {time.monotonic()-t0:.2f}s")
-err = np.abs(res.betweenness - ref_arr).max()
+err = np.abs(res.output - ref_arr).max()
 print(f"  max abs diff: {err:.2e}  "
       f"({'OK' if err < 1e-2 else 'MISMATCH'})")
 
-top = np.argsort(res.betweenness)[::-1][:5]
+top = np.argsort(res.output)[::-1][:5]
 print("top-5 central vertices:",
-      [(int(v), round(float(res.betweenness[v]), 1)) for v in top])
+      [(int(v), round(float(res.output[v]), 1)) for v in top])

@@ -10,41 +10,39 @@ import time
 
 import numpy as np
 
-from repro.algorithms import MSParams, mariani_silver, naive_render
-from repro.core import (ElasticExecutor, HybridExecutor, LocalExecutor,
-                        VMPrice, price_performance, serverless_cost,
-                        vm_cost)
+from repro.algorithms import MSParams, ms_spec, naive_render
+from repro.core import (VMPrice, make_pool, price_performance,
+                        run_irregular, serverless_cost, vm_cost)
 
 params = MSParams(width=256, height=256, max_dwell=96,
                   initial_subdivision=4, max_depth=4)
+spec = ms_spec(params)
 
 print("naive per-pixel oracle ...")
 t0 = time.monotonic()
 oracle = naive_render(params)
 print(f"  {time.monotonic()-t0:.2f}s")
 
-for name, mk in (
-    ("parallel (local pool)", lambda: LocalExecutor(2,
-                                                    invoke_overhead=0.0)),
-    ("serverless (elastic)", lambda: ElasticExecutor(
-        max_concurrency=16, invoke_overhead=2e-3,
-        invoke_rate_limit=None)),
-    ("hybrid (local + elastic)", lambda: HybridExecutor(
-        local_concurrency=2, elastic_concurrency=16)),
+for name, kind, cfg in (
+    ("parallel (local pool)", "local",
+     dict(max_concurrency=2, invoke_overhead=0.0)),
+    ("serverless (elastic)", "elastic",
+     dict(max_concurrency=16, invoke_overhead=2e-3,
+          invoke_rate_limit=None)),
+    ("hybrid (local + elastic)", "hybrid",
+     dict(local_concurrency=2, elastic_concurrency=16)),
 ):
-    with mk() as pool:
-        t0 = time.monotonic()
-        res = mariani_silver(pool, params)
-        wall = time.monotonic() - t0
-    assert np.array_equal(res.image, oracle), "must match the oracle"
-    saved = res.filled_pixels / res.image.size
-    if name.startswith("parallel"):
-        cost = vm_cost(wall, VMPrice.named("c5.12xlarge"))
-    else:
-        recs = pool.records if hasattr(pool, "records") \
-            else pool.stats.records
-        cost = serverless_cost(recs, wall_time_s=wall)
-    mps = res.image.size / 1e6 / wall
+    with make_pool(kind, **cfg) as pool:
+        res = run_irregular(pool, spec)
+        wall = res.wall_time_s
+        image = res.output["image"]
+        assert np.array_equal(image, oracle), "must match the oracle"
+        saved = res.output["filled"] / image.size
+        if kind == "local":
+            cost = vm_cost(wall, VMPrice.named("c5.12xlarge"))
+        else:
+            cost = serverless_cost(pool.records, wall_time_s=wall)
+    mps = image.size / 1e6 / wall
     print(f"{name:26s} {wall:6.2f}s  tasks={res.tasks:5d}  "
           f"filled={saved:5.1%}  {mps:6.2f} MP/s  "
           f"${cost.total:.6f}  "

@@ -4,18 +4,24 @@
 
 The 60-second tour of the paper's idea: a wildly unbalanced workload
 (UTS), a thread-pool-shaped API, and an elastic pool that absorbs the
-irregularity without any static provisioning decisions.
+irregularity without any static provisioning decisions.  The whole
+drive is two calls on the unified surface:
+
+    pool   = make_pool("elastic", ...)
+    result = run_irregular(pool, uts_spec(params))
 """
 import time
 
-from repro.algorithms import UTSParams, uts_parallel, uts_sequential
-from repro.core import (ElasticExecutor, StagedController, TaskShape,
-                        characterize, price_performance, serverless_cost)
+from repro.algorithms import UTSParams, uts_sequential, uts_spec
+from repro.core import (StagedController, TaskShape, characterize,
+                        make_pool, price_performance, run_irregular,
+                        serverless_cost)
 from repro.core.adaptive import Stage
 
 # A tree of ~460k nodes whose shape is unknowable in advance (geometric
 # branching over SHA-1 digests — the UTS benchmark, b0=4, depth 10).
 params = UTSParams(seed=19, b0=4.0, max_depth=10, chunk=4096)
+spec = uts_spec(params)
 
 print("sequential baseline ...")
 t0 = time.monotonic()
@@ -24,17 +30,15 @@ t_seq = time.monotonic() - t0
 print(f"  {expected:,} nodes in {t_seq:.2f}s")
 
 print("elastic executor (16 workers, FaaS-style 1ms invoke) ...")
-with ElasticExecutor(max_concurrency=16, invoke_overhead=1e-3,
-                     invoke_rate_limit=None) as pool:
-    t0 = time.monotonic()
-    result = uts_parallel(pool, params,
-                          shape=TaskShape(split_factor=8, iters=2000))
-    wall = time.monotonic() - t0
-    assert result.count == expected, "parallel traversal must be exact"
-    cost = serverless_cost(pool.stats.records, wall_time_s=wall)
-    ch = characterize(pool.stats.records)
+with make_pool("elastic", max_concurrency=16, invoke_overhead=1e-3,
+               invoke_rate_limit=None) as pool:
+    result = run_irregular(pool, spec,
+                           shape=TaskShape(split_factor=8, iters=2000))
+    assert result.output == expected, "parallel traversal must be exact"
+    cost = serverless_cost(pool.records, wall_time_s=result.wall_time_s)
+    ch = characterize(pool.records)
 
-print(f"  {result.count:,} nodes in {wall:.2f}s "
+print(f"  {result.output:,} nodes in {result.wall_time_s:.2f}s "
       f"({result.throughput/1e6:.2f} M nodes/s, "
       f"{result.tasks} tasks, peak concurrency "
       f"{result.peak_concurrency})")
@@ -52,12 +56,19 @@ ctrl = StagedController(initial=TaskShape(32, 500), stages=[
     Stage(11, "below", TaskShape(2, 4000)),
     Stage(2, "below", TaskShape(2, 1500)),
 ])
-with ElasticExecutor(max_concurrency=16, invoke_overhead=1e-3,
-                     invoke_rate_limit=None) as pool:
-    t0 = time.monotonic()
-    result = uts_parallel(pool, params, shape=TaskShape(32, 500),
-                          controller=ctrl)
-    t_dyn = time.monotonic() - t0
-assert result.count == expected
-print(f"  {t_dyn:.2f}s with dynamic (split_factor, iters) "
+with make_pool("elastic", max_concurrency=16, invoke_overhead=1e-3,
+               invoke_rate_limit=None) as pool:
+    result = run_irregular(pool, spec, shape=TaskShape(32, 500),
+                           controller=ctrl)
+assert result.output == expected
+print(f"  {result.wall_time_s:.2f}s with dynamic (split_factor, iters) "
       f"({len(result.controller_transitions)} stage transitions)")
+
+print("same drive at the paper's true scale (2000 virtual workers) ...")
+with make_pool("sim", max_concurrency=2000, invoke_overhead=13e-3,
+               duration_fn=lambda task, result: 1e-6 * result[0]) as pool:
+    result = run_irregular(pool, spec, shape=TaskShape(50, 5000))
+assert result.output == expected
+print(f"  virtual makespan {pool.virtual_time_s:.2f}s, "
+      f"peak concurrency {result.peak_concurrency} "
+      f"(event-driven, one host core)")

@@ -1,4 +1,9 @@
-"""The paper's three irregular, unbalanced algorithms on the executor."""
+"""The paper's three irregular algorithms as ``WorkSpec`` definitions.
+
+Each module exports a ``*_spec`` factory consumed by the unified
+``repro.core.run_irregular`` driver over any ``make_pool`` backend; the
+old per-algorithm entry points (``uts_parallel``, ``mariani_silver``,
+``betweenness_centrality``) remain as deprecated shims."""
 from .uts import (
     Bag,
     UTSParams,
@@ -7,6 +12,7 @@ from .uts import (
     expected_tree_size,
     uts_parallel,
     uts_sequential,
+    uts_spec,
 )
 from .mariani_silver import (
     Action,
@@ -15,6 +21,7 @@ from .mariani_silver import (
     Rect,
     evaluate_rect,
     mariani_silver,
+    ms_spec,
     naive_render,
 )
 from .betweenness import (
@@ -22,15 +29,16 @@ from .betweenness import (
     RMATParams,
     bc_batch,
     bc_single_node,
+    bc_spec,
     betweenness_centrality,
     rmat_graph,
 )
 
 __all__ = [
     "Bag", "UTSParams", "UTSResult", "expand_bag", "expected_tree_size",
-    "uts_parallel", "uts_sequential",
+    "uts_parallel", "uts_sequential", "uts_spec",
     "Action", "MSParams", "MSResult", "Rect", "evaluate_rect",
-    "mariani_silver", "naive_render",
-    "BCResult", "RMATParams", "bc_batch", "bc_single_node",
+    "mariani_silver", "ms_spec", "naive_render",
+    "BCResult", "RMATParams", "bc_batch", "bc_single_node", "bc_spec",
     "betweenness_centrality", "rmat_graph",
 ]

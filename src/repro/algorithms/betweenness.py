@@ -25,10 +25,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core import BaseExecutor
+from ..core import Pool, TaskShape, WorkSpec, run_irregular
 
 __all__ = ["RMATParams", "rmat_graph", "bc_batch", "bc_single_node",
-           "betweenness_centrality", "BCResult"]
+           "bc_spec", "betweenness_centrality", "BCResult"]
 
 _INF = np.int32(2**30)
 
@@ -170,31 +170,57 @@ class BCResult:
             if self.wall_time_s else 0.0
 
 
+def bc_spec(
+    p: RMATParams,
+    *,
+    n_tasks: int = 128,
+    regenerate_graph: bool = True,
+    adj: Optional[np.ndarray] = None,
+) -> WorkSpec:
+    """BC as a declarative ``WorkSpec``: a static map-reduce.
+
+    Paper Listing 4 — the vertex set is partitioned into ``n_tasks``
+    source blocks; each task runs batched Brandes for its block and the
+    master aggregates the ``globalBetweennessMap`` (line 34) in the
+    ``reduce`` hook.  With ``regenerate_graph`` each function rebuilds
+    the graph from the R-MAT parameters (line 44)."""
+    if adj is None:
+        adj = rmat_graph(p)
+    n = adj.shape[0]
+    shipped = None if regenerate_graph else adj
+
+    def seed(shape: TaskShape) -> List[np.ndarray]:
+        return [block for block in
+                np.array_split(np.arange(n, dtype=np.int32), n_tasks)
+                if len(block)]
+
+    def execute(block: np.ndarray, shape: TaskShape) -> np.ndarray:
+        return _bc_task(p, block, shipped)
+
+    return WorkSpec(
+        name="betweenness_centrality",
+        execute=execute,
+        seed=seed,
+        reduce=lambda total, partial: total + partial,
+        init=lambda: np.zeros(n, np.float64),
+        cost_hint=lambda block: float(len(block)),
+    )
+
+
 def betweenness_centrality(
-    executor: BaseExecutor,
+    executor: Pool,
     p: RMATParams,
     *,
     n_tasks: int = 128,
     regenerate_graph: bool = True,
     adj: Optional[np.ndarray] = None,
 ) -> BCResult:
-    """Paper Listing 4: static partition of sources over the executor."""
+    """Deprecated shim over ``run_irregular(pool, bc_spec(p, ...))``."""
     t0 = time.monotonic()
-    if adj is None:
-        adj = rmat_graph(p)
-    n = adj.shape[0]
-    shipped = None if regenerate_graph else adj
-    futures = [
-        executor.submit(_bc_task, p, block, shipped,
-                        cost_hint=float(len(block)))
-        for block in np.array_split(np.arange(n, dtype=np.int32), n_tasks)
-        if len(block)
-    ]
-    total = np.zeros(n, np.float64)
-    for f in futures:
-        total += f.result()  # aggregate globalBetweennessMap (line 34)
+    r = run_irregular(executor, bc_spec(
+        p, n_tasks=n_tasks, regenerate_graph=regenerate_graph, adj=adj))
     return BCResult(
-        betweenness=total,
+        betweenness=r.output,
         wall_time_s=time.monotonic() - t0,
-        tasks=len(futures),
+        tasks=r.tasks,
     )

@@ -5,8 +5,9 @@ rectangle; if every border pixel has the same dwell, fill the rectangle
 with it (valid because the Mandelbrot set — and each dwell band — has a
 connected complement); otherwise split and recurse, with full per-pixel
 evaluation at the maximum depth.  Nested parallelism: each split spawns
-child tasks, exactly the dynamic-parallelism case study of the CUDA
-reference, here driven by the master's result queue (Listing 3).
+child tasks — since the unified-pool redesign this is the ``split`` hook
+of ``ms_spec`` driven by the generic ``repro.core.run_irregular`` loop
+(``mariani_silver`` remains as a shim over it).
 
 Task bodies call the Pallas escape-time kernel (repro.kernels.mandelbrot)
 for both border strips and leaf rectangles.
@@ -16,16 +17,16 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 import jax.numpy as jnp
 
-from ..core import BaseExecutor
+from ..core import Pool, TaskShape, WorkSpec, run_irregular
 from ..kernels.mandelbrot.ops import mandelbrot
 from ..kernels.mandelbrot.ref import coords
 
-__all__ = ["MSParams", "Rect", "Action", "RectResult",
+__all__ = ["MSParams", "Rect", "Action", "RectResult", "ms_spec",
            "evaluate_rect", "mariani_silver", "naive_render", "MSResult"]
 
 
@@ -137,50 +138,63 @@ class MSResult:
         return self.image.size / self.wall_time_s if self.wall_time_s else 0.0
 
 
-def mariani_silver(executor: BaseExecutor, p: MSParams) -> MSResult:
-    """Master loop: dispatch rect tasks, apply actions, recurse on SPLIT."""
+def ms_spec(p: MSParams) -> WorkSpec:
+    """Mariani-Silver as a declarative ``WorkSpec``.
+
+    Work items are pixel rectangles; the master folds FILL /
+    SET_DWELL_ARRAY actions into the image and recurses on SPLIT via
+    the ``split`` hook (Listing 3's nested parallelism)."""
+
+    def seed(shape: TaskShape) -> List[Rect]:
+        sd = p.initial_subdivision
+        xs = np.linspace(0, p.width, sd + 1).astype(int)
+        ys = np.linspace(0, p.height, sd + 1).astype(int)
+        return [Rect(xs[j], ys[i], xs[j + 1], ys[i + 1], 0)
+                for i in range(sd) for j in range(sd)]
+
+    def execute(rect: Rect, shape: TaskShape) -> RectResult:
+        return evaluate_rect(rect, p)
+
+    def split(res: RectResult, shape: TaskShape) -> List[Rect]:
+        if res.action is Action.SPLIT:
+            return _split_rect(res.rect, p.split)
+        return []
+
+    def init() -> Dict[str, Any]:
+        return {"image": np.zeros((p.height, p.width), np.int32),
+                "filled": 0, "evaluated": 0}
+
+    def reduce(state: Dict[str, Any], res: RectResult) -> Dict[str, Any]:
+        r = res.rect
+        if res.action is Action.FILL:
+            state["image"][r.py0:r.py1, r.px0:r.px1] = res.dwell_to_fill
+            state["filled"] += r.w * r.h
+        elif res.action is Action.SET_DWELL_ARRAY:
+            state["image"][r.py0:r.py1, r.px0:r.px1] = res.dwell_array
+            state["evaluated"] += r.w * r.h
+        return state
+
+    return WorkSpec(
+        name="mariani_silver",
+        execute=execute,
+        seed=seed,
+        split=split,
+        reduce=reduce,
+        init=init,
+        cost_hint=lambda rect: float(rect.w * rect.h),
+    )
+
+
+def mariani_silver(executor: Pool, p: MSParams) -> MSResult:
+    """Deprecated shim over ``run_irregular(pool, ms_spec(p))``."""
     t0 = time.monotonic()
-    image = np.zeros((p.height, p.width), np.int32)
-    filled = 0
-    evaluated = 0
-
-    initial: List[Rect] = []
-    sd = p.initial_subdivision
-    xs = np.linspace(0, p.width, sd + 1).astype(int)
-    ys = np.linspace(0, p.height, sd + 1).astype(int)
-    for i in range(sd):
-        for j in range(sd):
-            initial.append(Rect(xs[j], ys[i], xs[j + 1], ys[i + 1], 0))
-
-    pending = [executor.submit(evaluate_rect, r, p,
-                               cost_hint=float(r.w * r.h)) for r in initial]
-    while pending:
-        done_ix = [i for i, f in enumerate(pending) if f.done()]
-        if not done_ix:
-            pending[0].result()
-            done_ix = [i for i, f in enumerate(pending) if f.done()]
-        for i in sorted(done_ix, reverse=True):
-            f = pending.pop(i)
-            res: RectResult = f.result()
-            r = res.rect
-            if res.action is Action.FILL:
-                image[r.py0:r.py1, r.px0:r.px1] = res.dwell_to_fill
-                filled += r.w * r.h
-            elif res.action is Action.SET_DWELL_ARRAY:
-                image[r.py0:r.py1, r.px0:r.px1] = res.dwell_array
-                evaluated += r.w * r.h
-            else:  # SPLIT -> nested parallelism
-                for child in _split_rect(r, p.split):
-                    pending.append(executor.submit(
-                        evaluate_rect, child, p,
-                        cost_hint=float(child.w * child.h)))
-
+    r = run_irregular(executor, ms_spec(p))
     return MSResult(
-        image=image,
+        image=r.output["image"],
         wall_time_s=time.monotonic() - t0,
-        tasks=executor.stats.submitted,
-        filled_pixels=filled,
-        evaluated_pixels=evaluated,
+        tasks=r.tasks,
+        filled_pixels=r.output["filled"],
+        evaluated_pixels=r.output["evaluated"],
     )
 
 

@@ -10,8 +10,10 @@ Structure mirrors the paper exactly:
 * a ``Bag`` encapsulates a frontier of unexplored subtrees;
 * each task traverses at most ``iters`` nodes of its bag and returns the
   leftover bag (``RemoteUTSCallable``);
-* the master drains a result queue, re-splits leftover bags with the
-  current split factor and re-dispatches (``uts`` loop of Listing 2);
+* the master re-splits leftover bags with the current split factor and
+  re-dispatches; since the unified-pool redesign that loop is the
+  generic ``repro.core.run_irregular`` driver and UTS is just the
+  ``uts_spec`` WorkSpec below (``uts_parallel`` remains as a shim);
 * the adaptive controller of §5.2 retunes (split_factor, iters) from the
   live concurrency level.
 
@@ -22,7 +24,6 @@ are identical (each node expanded exactly once).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
@@ -30,9 +31,11 @@ import numpy as np
 import jax.numpy as jnp
 
 from ..core import (
-    BaseExecutor,
+    Pool,
     StagedController,
     TaskShape,
+    WorkSpec,
+    run_irregular,
 )
 import jax
 
@@ -47,7 +50,7 @@ from ..kernels.uts_hash.numpy_impl import (
     uts_child_digests_np,
 )
 
-__all__ = ["Bag", "UTSParams", "UTSResult", "expand_bag",
+__all__ = ["Bag", "UTSParams", "UTSResult", "expand_bag", "uts_spec",
            "uts_sequential", "uts_parallel", "expected_tree_size"]
 
 
@@ -197,55 +200,59 @@ class UTSResult:
         return self.count / self.wall_time_s if self.wall_time_s else 0.0
 
 
+def uts_spec(params: UTSParams) -> WorkSpec:
+    """UTS as a declarative ``WorkSpec`` for ``run_irregular``.
+
+    Work items are ``Bag`` frontiers; the task body traverses at most
+    ``shape.iters`` nodes and returns ``(count, leftover)``; leftovers
+    are re-split with the live split factor (paper's ``resizeBag``)."""
+
+    def _resize(bag: Bag, shape: TaskShape) -> List[Bag]:
+        return bag.split(shape.split_factor if bag.size > 1 else 1)
+
+    def execute(bag: Bag, shape: TaskShape) -> Tuple[int, Bag]:
+        return expand_bag(bag, shape.iters, params)
+
+    def split(result: Tuple[int, Bag], shape: TaskShape) -> List[Bag]:
+        _, leftover = result
+        return _resize(leftover, shape) if leftover.size else []
+
+    return WorkSpec(
+        name="uts",
+        execute=execute,
+        seed=lambda shape: _resize(Bag.root(params), shape),
+        split=split,
+        reduce=lambda total, result: total + result[0],
+        init=lambda: 0,
+        cost_hint=lambda bag: float(bag.size),
+        shape=TaskShape(split_factor=8, iters=50_000),
+    )
+
+
 def uts_parallel(
-    executor: BaseExecutor,
+    executor: Pool,
     params: UTSParams,
     *,
     shape: TaskShape = TaskShape(split_factor=8, iters=50_000),
     controller: Optional[StagedController] = None,
     initial_split: Optional[int] = None,
 ) -> UTSResult:
-    """Paper Listing 2 (master loop) with optional Listing 5 controller."""
-    t0 = time.monotonic()
-    total = 0
-    active = 0
-    pending: List = []
+    """Deprecated shim over ``run_irregular(pool, uts_spec(params))``.
 
-    def dispatch(bag: Bag, shp: TaskShape) -> None:
-        nonlocal active
-        for sub in bag.split(shp.split_factor if bag.size > 1 else 1):
-            active += 1
-            pending.append(executor.submit(
-                expand_bag, sub, shp.iters, params,
-                cost_hint=float(sub.size)))
-
-    dispatch(Bag.root(params),
-             TaskShape(initial_split or shape.split_factor, shape.iters))
-
-    while pending:
-        # drain whichever futures are done; block on the oldest otherwise
-        done_ix = [i for i, f in enumerate(pending) if f.done()]
-        if not done_ix:
-            pending[0].result()
-            done_ix = [i for i, f in enumerate(pending) if f.done()]
-        for i in sorted(done_ix, reverse=True):
-            f = pending.pop(i)
-            count, leftover = f.result()
-            active -= 1
-            total += count
-            if controller is not None:
-                shape = controller.update(active)
-            if leftover.size:
-                dispatch(leftover, shape)
-
+    Kept for source compatibility with the per-algorithm master loops;
+    new code should drive ``uts_spec`` directly (Listing 2's loop and
+    the Listing 5 controller both live in ``repro.core.irregular``)."""
+    initial = (TaskShape(initial_split, shape.iters)
+               if initial_split is not None else None)
+    r = run_irregular(executor, uts_spec(params), shape=shape,
+                      initial_shape=initial, controller=controller)
     return UTSResult(
-        count=total,
-        wall_time_s=time.monotonic() - t0,
-        tasks=executor.stats.submitted,
+        count=r.output,
+        wall_time_s=r.wall_time_s,
+        tasks=r.tasks,
         params=params,
-        peak_concurrency=executor.stats.peak_concurrency,
-        controller_transitions=(controller.transitions
-                                if controller is not None else []),
+        peak_concurrency=r.peak_concurrency,
+        controller_transitions=r.controller_transitions,
     )
 
 

@@ -1,22 +1,33 @@
 """Core elastic-executor middleware — the paper's primary contribution.
 
-Public API:
-    LocalExecutor, ElasticExecutor, HybridExecutor, as_completed
-    ElasticFuture, Task, TaskRecord
+Unified public API (one pool abstraction, one master loop):
+    Pool, make_pool("local"|"elastic"|"hybrid"|"sim"|"speculative", **cfg)
+    WorkSpec, run_irregular(pool, spec, ...), IrregularResult
+    as_completed, CompletionQueue            (event-driven completions)
+
+Backends and primitives:
+    LocalExecutor, ElasticExecutor, HybridExecutor, SimPool
+    ElasticFuture, Task, TaskRecord, ExecutorStats, ConcurrencyTracker
     StagedController, OccupancyController, TaskShape
     serverless_cost, vm_cost, emr_cluster_cost, price_performance
     characterize, coefficient_of_variation
 """
-from .futures import ElasticFuture, Task, TaskRecord, TaskState
+from .futures import (CompletionQueue, ElasticFuture, Task, TaskRecord,
+                      TaskState)
+from .pool import Pool, make_pool, register_pool, registered_pools
 from .executor import (
     BaseExecutor,
+    ConcurrencyTracker,
     ElasticExecutor,
+    ExecutorStats,
     FunctionThrottledError,
     LocalExecutor,
     as_completed,
 )
 from .hybrid import HybridExecutor
+from .simpool import SimPool, simulate_uts_pool
 from .adaptive import OccupancyController, StagedController, TaskShape
+from .irregular import IrregularResult, WorkSpec, run_irregular
 from .costmodel import (
     CostReport,
     LambdaPrice,
@@ -37,8 +48,12 @@ from .characterization import (
 )
 
 __all__ = [
-    "ElasticFuture", "Task", "TaskRecord", "TaskState",
+    "Pool", "make_pool", "register_pool", "registered_pools",
+    "WorkSpec", "run_irregular", "IrregularResult",
+    "ElasticFuture", "Task", "TaskRecord", "TaskState", "CompletionQueue",
     "BaseExecutor", "ElasticExecutor", "LocalExecutor", "HybridExecutor",
+    "SimPool", "simulate_uts_pool",
+    "ExecutorStats", "ConcurrencyTracker",
     "FunctionThrottledError", "as_completed",
     "StagedController", "OccupancyController", "TaskShape",
     "CostReport", "LambdaPrice", "VMPrice", "TPUPrice",

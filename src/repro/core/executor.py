@@ -23,24 +23,31 @@ Semantics intentionally mirrored from the paper:
     re-dispatch and fault recovery, `speculative_deadline`);
   * the client enforces the concurrency limit, never the platform;
   * results flow back through a queue drained by the master
-    (``as_completed`` / ``result_queue``).
+    (``as_completed`` / ``run_irregular``), event-driven via the
+    future-callback layer in ``futures.CompletionQueue``.
+
+Both executors satisfy the unified ``repro.core.pool.Pool`` contract
+and are registered with ``make_pool`` as ``"local"`` / ``"elastic"``.
 """
 from __future__ import annotations
 
-import collections
 import queue
 import threading
 import time
-from typing import Any, Callable, Iterable, Iterator, List, Optional, Sequence
+from typing import Any, Callable, Iterable, Iterator, List, Optional
 
-from .futures import ElasticFuture, Task, TaskRecord, TaskState
+from .futures import (CompletionQueue, ElasticFuture, Task, TaskRecord,
+                      TaskState)
+from .pool import Pool, register_pool
 
 __all__ = [
+    "ConcurrencyTracker",
     "ExecutorStats",
     "BaseExecutor",
     "LocalExecutor",
     "ElasticExecutor",
     "FunctionThrottledError",
+    "as_completed",
 ]
 
 
@@ -50,8 +57,35 @@ class FunctionThrottledError(RuntimeError):
     (mirrors AWS Lambda's throttling exception, paper §3.1)."""
 
 
+class ConcurrencyTracker:
+    """Shared active/peak counter several stats objects can notify.
+
+    ``HybridExecutor`` attaches one tracker to both its sub-pools'
+    stats, yielding the *true* combined peak concurrency (the old
+    per-pool-peak sum was only an upper bound — pools rarely peak at
+    the same instant)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.active = 0
+        self.peak = 0
+
+    def task_started(self) -> None:
+        with self._lock:
+            self.active += 1
+            self.peak = max(self.peak, self.active)
+
+    def task_finished(self) -> None:
+        with self._lock:
+            self.active -= 1
+
+
 class ExecutorStats:
-    """Thread-safe running statistics of an executor pool."""
+    """Thread-safe running statistics of an executor pool.
+
+    ``failed`` counts *terminal* failures only; transient attempts that
+    are requeued for retry show up in ``retries`` (and as extra
+    billable ``invocations``), never in ``failed``."""
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
@@ -64,6 +98,7 @@ class ExecutorStats:
         self.invocations = 0  # billable invocations (includes retries)
         self.records: List[TaskRecord] = []
         self.concurrency_trace: List[tuple] = []  # (t, active) samples
+        self.trackers: List[ConcurrencyTracker] = []
 
     def _sample(self) -> None:
         self.concurrency_trace.append((time.monotonic(), self.active))
@@ -78,6 +113,8 @@ class ExecutorStats:
             self.invocations += 1
             self.peak_concurrency = max(self.peak_concurrency, self.active)
             self._sample()
+        for t in self.trackers:
+            t.task_started()
 
     def on_finish(self, record: Optional[TaskRecord], ok: bool) -> None:
         with self._lock:
@@ -89,6 +126,18 @@ class ExecutorStats:
             if record is not None:
                 self.records.append(record)
             self._sample()
+        for t in self.trackers:
+            t.task_finished()
+
+    def on_requeue(self) -> None:
+        """A transient attempt ended and the task went back on the
+        queue: the slot frees up but neither ``completed`` nor
+        ``failed`` moves (the retry-path double count of old)."""
+        with self._lock:
+            self.active -= 1
+            self._sample()
+        for t in self.trackers:
+            t.task_finished()
 
     def on_retry(self) -> None:
         with self._lock:
@@ -107,7 +156,7 @@ class ExecutorStats:
             }
 
 
-class BaseExecutor:
+class BaseExecutor(Pool):
     """Common machinery: worker threads pulling from a bounded queue."""
 
     #: human-readable pool kind ("local" | "elastic")
@@ -196,9 +245,7 @@ class BaseExecutor:
 
     def _run_one(self, task: Task, future: ElasticFuture, worker: str) -> None:
         if future.state is TaskState.CANCELLED:
-            self.stats.on_start()
-            self.stats.on_finish(None, ok=False)
-            return
+            return  # never started: no invocation, no failure
         self._respect_rate_limit()
         self.stats.on_start()
         future._set_running()
@@ -214,9 +261,10 @@ class BaseExecutor:
         except BaseException as exc:  # noqa: BLE001 — report any failure
             task.end_time = time.monotonic()
             if task.attempts < self.max_attempts:
-                # stateless ⇒ safe to re-invoke (paper §3.3)
+                # stateless ⇒ safe to re-invoke (paper §3.3); transient,
+                # so it counts as a retry, not a failure
                 self.stats.on_retry()
-                self.stats.on_finish(None, ok=False)
+                self.stats.on_requeue()
                 self._queue.put((task, future))
                 return
             self.stats.on_finish(self._record(task, worker), ok=False)
@@ -257,10 +305,6 @@ class BaseExecutor:
         self._queue.put((task, future))
         return future
 
-    def map(self, fn: Callable[[Any], Any], items: Sequence[Any]) -> List[Any]:
-        futures = [self.submit(fn, item) for item in items]
-        return [f.result() for f in futures]
-
     def pending(self) -> int:
         return self._queue.qsize()
 
@@ -278,13 +322,7 @@ class BaseExecutor:
             for _ in self._workers:
                 self._queue.put(None)
 
-    def __enter__(self) -> "BaseExecutor":
-        return self
-
-    def __exit__(self, *exc: Any) -> None:
-        self.shutdown()
-
-
+@register_pool("local")
 class LocalExecutor(BaseExecutor):
     """The paper's local thread pool: ~18 us submit overhead, bounded by
     host cores (or an explicit limit)."""
@@ -297,6 +335,7 @@ class LocalExecutor(BaseExecutor):
         super().__init__(max_concurrency, **kw)
 
 
+@register_pool("elastic")
 class ElasticExecutor(BaseExecutor):
     """The ServerlessExecutor analogue: elastic stateless worker pool.
 
@@ -326,19 +365,14 @@ class ElasticExecutor(BaseExecutor):
 
 def as_completed(futures: Iterable[ElasticFuture],
                  timeout: Optional[float] = None) -> Iterator[ElasticFuture]:
-    """Yield futures as they complete (master-side result queue drain)."""
-    pending = collections.deque(futures)
+    """Yield futures as they complete (master-side result queue drain).
+
+    Event-driven: blocks on the futures' shared condition variable via
+    ``CompletionQueue`` instead of the old 100 us ``done()`` poll."""
+    fs = list(futures)
+    cq = CompletionQueue(fs)
     deadline = None if timeout is None else time.monotonic() + timeout
-    while pending:
-        progressed = False
-        for _ in range(len(pending)):
-            f = pending.popleft()
-            if f.done():
-                progressed = True
-                yield f
-            else:
-                pending.append(f)
-        if not progressed:
-            if deadline is not None and time.monotonic() > deadline:
-                raise TimeoutError(f"{len(pending)} futures still pending")
-            time.sleep(1e-4)
+    for _ in range(len(fs)):
+        remaining = (None if deadline is None
+                     else deadline - time.monotonic())
+        yield cq.next(timeout=remaining)

@@ -7,15 +7,21 @@ all data in via the closure's bound arguments, all data out via the return
 value.  This matches functional JAX perfectly — a jitted function plus its
 operands is a serializable, idempotent unit of work, which is what makes
 straggler re-dispatch and fault re-execution safe.
+
+Completion is *event-driven*: every future carries done-callbacks, and
+``CompletionQueue`` multiplexes any number of futures onto one
+condition variable so masters (``as_completed``, ``run_irregular``)
+block instead of busy-polling the result queue.
 """
 from __future__ import annotations
 
+import collections
 import itertools
 import threading
 import time
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Iterable, List, Optional
 
 _task_counter = itertools.count()
 
@@ -38,6 +44,7 @@ class ElasticFuture:
         self._exc: Optional[BaseException] = None
         self._state = TaskState.PENDING
         self._lock = threading.Lock()
+        self._callbacks: List[Callable[["ElasticFuture"], None]] = []
 
     # -- executor-side -------------------------------------------------
     def _set_running(self) -> None:
@@ -45,30 +52,56 @@ class ElasticFuture:
             if self._state is TaskState.PENDING:
                 self._state = TaskState.RUNNING
 
+    _SETTLED = (TaskState.DONE, TaskState.FAILED, TaskState.CANCELLED)
+
     def _set_result(self, value: Any) -> None:
         with self._lock:
-            if self._state in (TaskState.DONE, TaskState.CANCELLED):
-                return  # first completion wins (speculative duplicates)
+            if self._state in self._SETTLED:
+                return  # first settlement wins (speculative duplicates)
             self._result = value
             self._state = TaskState.DONE
         self._event.set()
+        self._invoke_callbacks()
 
     def _set_exception(self, exc: BaseException) -> None:
         with self._lock:
-            if self._state in (TaskState.DONE, TaskState.CANCELLED):
+            if self._state in self._SETTLED:
                 return
             self._exc = exc
             self._state = TaskState.FAILED
         self._event.set()
+        self._invoke_callbacks()
+
+    def _invoke_callbacks(self) -> None:
+        with self._lock:
+            cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            cb(self)
 
     # -- client-side ----------------------------------------------------
+    def add_done_callback(self,
+                          fn: Callable[["ElasticFuture"], None]) -> None:
+        """Run ``fn(self)`` once the future settles (done / failed /
+        cancelled); immediately if it already has.  The notification
+        backbone of ``CompletionQueue`` — never called with the future's
+        lock held."""
+        with self._lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
     def cancel(self) -> bool:
         with self._lock:
             if self._state is TaskState.PENDING:
                 self._state = TaskState.CANCELLED
                 self._event.set()
-                return True
-            return False
+                cancelled = True
+            else:
+                cancelled = False
+        if cancelled:
+            self._invoke_callbacks()
+        return cancelled
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -142,3 +175,77 @@ class TaskRecord:
     @property
     def queue_delay(self) -> float:
         return self.start_time - self.submit_time
+
+
+class CompletionQueue:
+    """Event-driven fan-in of future completions.
+
+    Futures are registered with :meth:`add`; their done-callbacks push
+    them onto an internal deque and notify a single condition variable,
+    so consumers *block* in :meth:`next` instead of polling ``done()``
+    at 100 us (the old ``as_completed`` hot loop).
+
+    Virtual-time pools (``SimPool``) cannot rely on wall-clock wakeups:
+    their futures complete only when the event heap is pumped.  A future
+    exposing a ``_sim`` attribute enrolls its pool as an *advancer*;
+    when nothing is done yet, :meth:`next` advances virtual time by one
+    event instead of sleeping.
+    """
+
+    def __init__(self, futures: Iterable["ElasticFuture"] = ()) -> None:
+        self._cond = threading.Condition()
+        self._done: "collections.deque[ElasticFuture]" = collections.deque()
+        self._pending: set = set()
+        self._advancers: set = set()
+        for f in futures:
+            self.add(f)
+
+    def add(self, future: "ElasticFuture") -> None:
+        with self._cond:
+            self._pending.add(future)
+        sim = getattr(future, "_sim", None)
+        if sim is not None:
+            self._advancers.add(sim)
+        future.add_done_callback(self._notify)
+
+    def _notify(self, future: "ElasticFuture") -> None:
+        with self._cond:
+            self._pending.discard(future)
+            self._done.append(future)
+            self._cond.notify_all()
+
+    def pending_count(self) -> int:
+        with self._cond:
+            return len(self._pending)
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._pending) + len(self._done)
+
+    def next(self, timeout: Optional[float] = None) -> "ElasticFuture":
+        """Block until any registered future settles and return it.
+
+        Raises ``TimeoutError`` after ``timeout`` seconds with futures
+        still pending, and ``LookupError`` if called with nothing
+        registered at all.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._cond:
+                if self._done:
+                    return self._done.popleft()
+                if not self._pending:
+                    raise LookupError("no futures registered")
+                n_pending = len(self._pending)
+            # virtual-time pools: advance one event instead of waiting
+            if any(pool._pump_one() for pool in self._advancers):
+                continue
+            with self._cond:
+                if self._done:
+                    continue
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"{n_pending} futures still pending")
+                self._cond.wait(remaining)

@@ -9,22 +9,30 @@ scheduling policy is the paper's naive-but-effective rule, verbatim:
 
 Transparency: callers submit to the HybridExecutor exactly as to any other
 executor; placement is invisible (Coulouris's *scaling transparency*).
+Satisfies the unified ``Pool`` contract (``make_pool("hybrid", ...)``);
+both sub-pools notify one shared ``ConcurrencyTracker``, so the combined
+``peak_concurrency`` is the true simultaneous maximum rather than the
+old sum of independent per-pool peaks.
 """
 from __future__ import annotations
 
 import threading
 from typing import Any, Callable, List, Optional
 
-from .executor import BaseExecutor, ElasticExecutor, LocalExecutor
+from .executor import (BaseExecutor, ConcurrencyTracker, ElasticExecutor,
+                       LocalExecutor)
 from .futures import ElasticFuture
+from .pool import Pool, register_pool
 
 __all__ = ["HybridExecutor"]
 
 
-class HybridExecutor:
+@register_pool("hybrid")
+class HybridExecutor(Pool):
     """Paper's ``ServerlessHybridExecutorService`` (Listing 1)."""
 
     kind = "hybrid"
+    remote = True  # spill tasks are billed as remote invocations
 
     def __init__(
         self,
@@ -41,6 +49,12 @@ class HybridExecutor:
         self._policy = policy or (lambda h: h.local.idle_capacity() > 0)
         self._lock = threading.Lock()
         self._submitted: List[ElasticFuture] = []
+        # shared notification layer -> true combined active/peak
+        self._tracker = ConcurrencyTracker()
+        self._tracker.active = (self.local.stats.active
+                                + self.elastic.stats.active)
+        self.local.stats.trackers.append(self._tracker)
+        self.elastic.stats.trackers.append(self._tracker)
 
     # -- the paper's submit(), lines 7-27 of Listing 1 ---------------------
     def submit(self, fn: Callable[..., Any], *args: Any,
@@ -54,18 +68,11 @@ class HybridExecutor:
             self._submitted.append(f)
             return f
 
-    def map(self, fn: Callable[[Any], Any], items) -> List[Any]:
-        futures = [self.submit(fn, item) for item in items]
-        return [f.result() for f in futures]
-
     # -- introspection -----------------------------------------------------
     @property
     def stats(self) -> "_CombinedStats":
-        return _CombinedStats(self.local.stats, self.elastic.stats)
-
-    @property
-    def records(self):
-        return self.local.stats.records + self.elastic.stats.records
+        return _CombinedStats(self.local.stats, self.elastic.stats,
+                              self._tracker)
 
     def placement_counts(self) -> dict:
         return {
@@ -83,18 +90,13 @@ class HybridExecutor:
         self.local.shutdown(wait=wait)
         self.elastic.shutdown(wait=wait)
 
-    def __enter__(self) -> "HybridExecutor":
-        return self
-
-    def __exit__(self, *exc: Any) -> None:
-        self.shutdown()
-
 
 class _CombinedStats:
     """Aggregate stats view over the local + elastic pools."""
 
-    def __init__(self, a, b):
+    def __init__(self, a, b, tracker: Optional[ConcurrencyTracker] = None):
         self._a, self._b = a, b
+        self._tracker = tracker
 
     @property
     def submitted(self):
@@ -109,6 +111,10 @@ class _CombinedStats:
         return self._a.failed + self._b.failed
 
     @property
+    def retries(self):
+        return self._a.retries + self._b.retries
+
+    @property
     def active(self):
         return self._a.active + self._b.active
 
@@ -118,7 +124,9 @@ class _CombinedStats:
 
     @property
     def peak_concurrency(self):
-        # upper bound: pools peak independently
+        if self._tracker is not None:
+            # true combined peak via the shared notification layer
+            return self._tracker.peak
         return self._a.peak_concurrency + self._b.peak_concurrency
 
     @property
@@ -128,7 +136,8 @@ class _CombinedStats:
     def snapshot(self) -> dict:
         return {
             "submitted": self.submitted, "completed": self.completed,
-            "failed": self.failed, "active": self.active,
+            "failed": self.failed, "retries": self.retries,
+            "active": self.active,
             "invocations": self.invocations,
             "peak_concurrency": self.peak_concurrency,
         }

@@ -1,0 +1,213 @@
+"""Generic master loop for irregular algorithms (``run_irregular``).
+
+The paper's three case studies (UTS Listing 2, Mariani-Silver
+Listing 3, BC Listing 4) share one skeleton: seed the pool with tasks,
+drain a result queue, fold results into state, spawn follow-up tasks,
+optionally retune the two §5.2 knobs from live concurrency.  The three
+copy-pasted drivers of old are now one event-driven loop; a workload is
+a declarative :class:`WorkSpec`:
+
+    seed(shape)          -> initial work items
+    execute(item, shape) -> result            (the stateless task body)
+    split(result, shape) -> follow-up items   (nested parallelism)
+    reduce(state, result)-> state             (master-side fold)
+
+plus ``init``/``finalize`` for the accumulator and ``cost_hint`` for
+characterization.  Any :class:`~repro.core.pool.Pool` backend works —
+``local``, ``elastic``, ``hybrid``, or the virtual-time ``sim`` pool —
+and stragglers can be speculatively re-dispatched (stateless tasks make
+duplication safe; the first completion wins at the future level).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+from .adaptive import TaskShape
+from .futures import CompletionQueue, ElasticFuture, TaskState
+from .pool import Pool
+
+__all__ = ["WorkSpec", "IrregularResult", "run_irregular"]
+
+
+def _no_children(result: Any, shape: TaskShape) -> Iterable[Any]:
+    return ()
+
+
+def _keep_state(state: Any, result: Any) -> Any:
+    return state
+
+
+@dataclass(frozen=True)
+class WorkSpec:
+    """Declarative description of an irregular workload.
+
+    ``execute`` must be a *stateless* function of ``(item, shape)`` —
+    all data in via arguments, all data out via the return value — so
+    re-dispatch (stragglers, failures) is safe.  Everything else runs
+    master-side.
+    """
+
+    name: str
+    #: stateless task body: (item, shape) -> result
+    execute: Callable[[Any, TaskShape], Any]
+    #: initial frontier: shape -> iterable of work items
+    seed: Callable[[TaskShape], Iterable[Any]]
+    #: follow-up work from a result (leftover bags, split rects); () to stop
+    split: Callable[[Any, TaskShape], Iterable[Any]] = _no_children
+    #: master-side fold of a result into the accumulator
+    reduce: Callable[[Any, Any], Any] = _keep_state
+    #: accumulator constructor
+    init: Callable[[], Any] = lambda: None
+    #: final state -> output transform
+    finalize: Callable[[Any], Any] = lambda state: state
+    #: a-priori work estimate per item (characterization / cost model)
+    cost_hint: Callable[[Any], float] = lambda item: 1.0
+    #: default task shape (split_factor, iters) when none is passed
+    shape: TaskShape = TaskShape(1, 1)
+
+
+@dataclass
+class IrregularResult:
+    """Outcome of one ``run_irregular`` drive."""
+
+    output: Any
+    wall_time_s: float
+    tasks: int                      # dispatches issued by this driver
+    peak_concurrency: int = 0
+    controller_transitions: list = field(default_factory=list)
+    speculated: int = 0             # straggler duplicates issued
+    pool_snapshot: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def throughput(self) -> float:
+        """Output units per second when ``output`` is a count."""
+        if not self.wall_time_s or not isinstance(self.output, (int, float)):
+            return 0.0
+        return self.output / self.wall_time_s
+
+
+@dataclass
+class _Dispatch:
+    item: Any
+    shape: TaskShape
+    issued_at: float
+    speculated: bool = False
+
+
+def run_irregular(
+    pool: Pool,
+    spec: WorkSpec,
+    *,
+    shape: Optional[TaskShape] = None,
+    initial_shape: Optional[TaskShape] = None,
+    controller: Optional[Any] = None,
+    speculative_deadline: Optional[float] = None,
+    timeout: Optional[float] = None,
+) -> IrregularResult:
+    """Drive ``spec`` over ``pool`` to completion.
+
+    shape                 task shape for dispatch (default: spec.shape)
+    initial_shape         override for the seed dispatch only (the
+                          paper's wide ramp-up split)
+    controller            object with ``update(active) -> TaskShape``
+                          (``StagedController`` / ``OccupancyController``);
+                          called once per completion, like Listing 5
+    speculative_deadline  clone a task that has been *running* longer
+                          than this many real seconds onto another
+                          worker; first settlement wins, the loser is
+                          ignored (meaningful on real-time pools only)
+    timeout               overall wall-clock bound -> ``TimeoutError``
+    """
+    t0 = time.monotonic()
+    shape = shape or spec.shape
+    state = spec.init()
+    cq = CompletionQueue()
+    outstanding: Dict[ElasticFuture, _Dispatch] = {}
+    n_dispatched = 0
+
+    def dispatch(item: Any, shp: TaskShape) -> None:
+        nonlocal n_dispatched
+        f = pool.submit(spec.execute, item, shp,
+                        cost_hint=spec.cost_hint(item))
+        outstanding[f] = _Dispatch(item, shp, time.monotonic())
+        cq.add(f)
+        n_dispatched += 1
+
+    for item in spec.seed(initial_shape or shape):
+        dispatch(item, initial_shape or shape)
+
+    deadline = None if timeout is None else t0 + timeout
+    speculated = 0
+
+    def scan_stragglers() -> None:
+        # A straggler is a task *running* past the deadline — queued
+        # tasks are excluded (cloning them would just lengthen the same
+        # queue).  One clone per dispatch, first settlement wins.
+        nonlocal speculated
+        now = time.monotonic()
+        for fut, d in list(outstanding.items()):
+            if d.speculated or fut.state is not TaskState.RUNNING:
+                continue
+            started = fut._task.start_time
+            if started is not None and now - started > speculative_deadline:
+                d.speculated = True
+                speculated += 1
+                _speculate(pool, spec, fut, d)
+
+    while outstanding:
+        remaining = None if deadline is None else deadline - time.monotonic()
+        if remaining is not None and remaining <= 0:
+            raise TimeoutError(
+                f"{spec.name}: {len(outstanding)} tasks still "
+                f"outstanding after {timeout}s")
+        wait = remaining
+        if speculative_deadline is not None:
+            # wake often enough to notice stragglers even when idle
+            slice_s = max(speculative_deadline / 4, 1e-3)
+            wait = slice_s if wait is None else min(wait, slice_s)
+        try:
+            f = cq.next(timeout=wait)
+        except TimeoutError:
+            if speculative_deadline is not None:
+                scan_stragglers()
+            continue
+        if speculative_deadline is not None:
+            # a busy completion stream must not mask stragglers: check
+            # deadlines on the completion path too, not only when idle
+            scan_stragglers()
+        d = outstanding.pop(f)
+        state = spec.reduce(state, f.result())
+        if controller is not None:
+            shape = controller.update(len(outstanding))
+        for child in spec.split(f.result(), shape):
+            dispatch(child, shape)
+
+    snap = pool.snapshot()
+    return IrregularResult(
+        output=spec.finalize(state),
+        wall_time_s=time.monotonic() - t0,
+        tasks=n_dispatched,
+        peak_concurrency=snap.get("peak_concurrency", 0),
+        controller_transitions=list(getattr(controller, "transitions", [])),
+        speculated=speculated,
+        pool_snapshot=snap,
+    )
+
+
+def _speculate(pool: Pool, spec: WorkSpec, target: ElasticFuture,
+               d: _Dispatch) -> None:
+    """Clone a straggling dispatch onto another worker.  The clone
+    resolves the *original* future; ``ElasticFuture`` keeps the first
+    completion and drops the rest (paper §3.3: stateless ⇒ duplication
+    is coordination-free)."""
+    def clone() -> Any:
+        result = spec.execute(d.item, d.shape)
+        target._set_result(result)  # no-op if the original won
+        return result
+
+    try:
+        pool.submit(clone, cost_hint=spec.cost_hint(d.item))
+    except RuntimeError:
+        pass  # pool already shutting down

@@ -1,0 +1,139 @@
+"""Unified executor-pool abstraction and backend registry.
+
+The paper's claim is that *one* serverless executor-pool abstraction
+suffices to run all three irregular workloads with no user-facing
+tuning.  This module is that abstraction's single public surface:
+
+* :class:`Pool` — the lifecycle contract every backend satisfies:
+  ``submit`` / ``map`` / ``pending`` / ``idle_capacity`` / ``stats`` /
+  ``records`` / ``snapshot`` / ``shutdown`` / context manager.
+* :func:`make_pool` — construct any registered backend by name::
+
+      with make_pool("elastic", max_concurrency=16) as pool:
+          pool.map(fn, items)
+
+Registered backends:
+
+==============  ====================================================
+``local``       host thread pool (paper's "parallel VM", ~18 us)
+``elastic``     ServerlessExecutor analogue (FaaS overhead + limits)
+``hybrid``      local-first spill-to-elastic (Listing 1)
+``sim``         virtual-time discrete-event pool (paper-scale figs)
+``speculative`` straggler-duplicating wrapper around any of the above
+==============  ====================================================
+
+Drive any of them with ``repro.core.run_irregular`` and a ``WorkSpec``.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, Dict, List, Sequence
+
+from .futures import ElasticFuture, TaskRecord
+
+__all__ = ["Pool", "make_pool", "register_pool", "registered_pools"]
+
+
+class Pool(abc.ABC):
+    """Contract shared by every executor backend.
+
+    Subclasses provide ``submit``/``shutdown``/``pending``/
+    ``idle_capacity`` and a ``stats`` object exposing ``records`` and
+    ``snapshot()``; everything else (``map``, ``records``,
+    ``snapshot``, context management) is inherited.
+    """
+
+    #: human-readable backend kind ("local" | "elastic" | ...)
+    kind: str = "abstract"
+    #: whether completions are billed as remote (FaaS) invocations
+    remote: bool = False
+
+    @abc.abstractmethod
+    def submit(self, fn: Callable[..., Any], *args: Any,
+               cost_hint: float = 1.0, **kwargs: Any) -> ElasticFuture:
+        """Submit a stateless task; returns its future."""
+
+    @abc.abstractmethod
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop accepting work; with ``wait`` drain what is queued."""
+
+    @abc.abstractmethod
+    def pending(self) -> int:
+        """Tasks queued but not yet running."""
+
+    @abc.abstractmethod
+    def idle_capacity(self) -> int:
+        """Free worker slots right now (drives hybrid placement)."""
+
+    # -- shared surface ----------------------------------------------------
+    def map(self, fn: Callable[[Any], Any],
+            items: Sequence[Any]) -> List[Any]:
+        futures = [self.submit(fn, item) for item in items]
+        return [f.result() for f in futures]
+
+    @property
+    def records(self) -> List[TaskRecord]:
+        """Completion log (characterization + cost accounting)."""
+        return self.stats.records
+
+    def snapshot(self) -> dict:
+        """Point-in-time counters (submitted/completed/failed/...)."""
+        return self.stats.snapshot()
+
+    def __enter__(self) -> "Pool":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.shutdown()
+
+
+_REGISTRY: Dict[str, Callable[..., Pool]] = {}
+
+
+def register_pool(kind: str) -> Callable:
+    """Class/factory decorator adding a backend to :func:`make_pool`."""
+    def deco(factory: Callable[..., Pool]) -> Callable[..., Pool]:
+        _REGISTRY[kind] = factory
+        return factory
+    return deco
+
+
+def registered_pools() -> List[str]:
+    _ensure_backends()
+    return sorted(_REGISTRY)
+
+
+def _ensure_backends() -> None:
+    # Backends self-register at import; importing the package normally
+    # pulls them all in, but guard direct `repro.core.pool` users too.
+    if {"local", "elastic", "hybrid", "sim"} <= _REGISTRY.keys():
+        return
+    from . import executor, hybrid, simpool  # noqa: F401
+
+
+def make_pool(kind: str, **cfg: Any) -> Pool:
+    """Construct an executor pool by backend name.
+
+    ``cfg`` is forwarded to the backend constructor, e.g.
+    ``make_pool("elastic", max_concurrency=16, invoke_overhead=1e-3)``.
+    """
+    _ensure_backends()
+    try:
+        factory = _REGISTRY[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown pool kind {kind!r}; registered: "
+            f"{', '.join(sorted(_REGISTRY))}") from None
+    return factory(**cfg)
+
+
+@register_pool("speculative")
+def _make_speculative(inner: Any = "elastic",
+                      inner_cfg: Dict[str, Any] = None,
+                      **kw: Any) -> Pool:
+    """Wrap an inner backend (instance or kind name) with deadline-based
+    straggler duplication (``repro.runtime.straggler``)."""
+    from ..runtime.straggler import SpeculativeExecutor
+    pool = inner if isinstance(inner, Pool) \
+        else make_pool(inner, **(inner_cfg or {}))
+    return SpeculativeExecutor(pool, **kw)

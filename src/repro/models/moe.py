@@ -26,7 +26,10 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:  # jax >= 0.5 exports it at top level
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from .config import MoEConfig

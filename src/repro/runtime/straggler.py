@@ -16,6 +16,7 @@ from typing import Any, Callable, List, Optional
 
 from ..core.executor import BaseExecutor
 from ..core.futures import ElasticFuture
+from ..core.pool import Pool
 
 __all__ = ["SpeculativeExecutor"]
 
@@ -30,13 +31,21 @@ class _Watch:
     duplicated: bool = False
 
 
-class SpeculativeExecutor:
-    """Wraps any executor with deadline-based task duplication."""
+class SpeculativeExecutor(Pool):
+    """Wraps any pool with deadline-based task duplication.
+
+    Satisfies the unified ``Pool`` contract itself (registered with
+    ``make_pool`` as ``"speculative"``), so it composes transparently
+    with ``run_irregular`` and the stats/records surface of the inner
+    backend."""
+
+    kind = "speculative"
 
     def __init__(self, inner: BaseExecutor, *,
                  factor: float = 3.0, floor_s: float = 0.5,
                  poll_s: float = 0.05, max_duplicates: int = 1):
         self.inner = inner
+        self.remote = getattr(inner, "remote", False)
         self.factor = factor
         self.floor_s = floor_s
         self.poll_s = poll_s

@@ -13,6 +13,13 @@ controller retunes the two serving knobs from live pool occupancy:
 
 The engine here is pluggable: tests drive a host ``SimEngine``; the pod
 path wires ``launch.serve`` 's jitted prefill/decode steps in.
+
+Since the unified-pool redesign the batcher reports through the same
+``ExecutorStats`` surface as every ``make_pool`` backend: requests are
+``on_submit``-ed at ingress, slots ``on_start`` at admission and
+``on_finish`` a ``TaskRecord`` at retirement, so ``stats`` /
+``records`` / ``snapshot()`` read exactly like an executor pool's and
+peak slot occupancy is measured by the shared notification layer.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ import numpy as np
 
 from ..core.adaptive import OccupancyController, TaskShape
 from ..core.characterization import characterize
+from ..core.executor import ExecutorStats
 from ..core.futures import TaskRecord
 
 __all__ = ["Request", "BatcherConfig", "ElasticBatcher", "SimEngine"]
@@ -86,6 +94,7 @@ class ElasticBatcher:
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * cfg.n_slots
         self.completed: List[Request] = []
+        self.stats = ExecutorStats()  # unified Pool stats surface
         self.controller = OccupancyController(
             capacity=cfg.n_slots,
             init_shape=TaskShape(split_factor=max(
@@ -97,6 +106,7 @@ class ElasticBatcher:
 
     # -- ingress --------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        self.stats.on_submit()
         self.queue.append(req)
 
     def _admit(self) -> None:
@@ -105,6 +115,7 @@ class ElasticBatcher:
                 req = self.queue.pop(0)
                 req.slot = i
                 self.slots[i] = req
+                self.stats.on_start()
 
     # -- one scheduler round ---------------------------------------------------
     def step(self) -> None:
@@ -147,6 +158,12 @@ class ElasticBatcher:
                 r.done_t = time.monotonic()
                 self.completed.append(r)
                 self.slots[i] = None
+                self.stats.on_finish(TaskRecord(
+                    task_id=r.rid, worker=f"slot{r.slot}",
+                    submit_time=r.arrived,
+                    start_time=r.first_token_t or r.arrived,
+                    end_time=r.done_t, cost_hint=r.prompt_len,
+                    remote=True), ok=True)
 
     def run(self, until_empty: bool = True, max_rounds: int = 100_000
             ) -> Dict[str, Any]:
@@ -158,13 +175,17 @@ class ElasticBatcher:
         wall = time.monotonic() - t0
         return self.report(wall, rounds)
 
+    @property
+    def records(self) -> List[TaskRecord]:
+        """Per-request completion log (the Pool ``records`` surface)."""
+        return self.stats.records
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Pool-style counters: submitted/active/completed/peak slots."""
+        return self.stats.snapshot()
+
     def report(self, wall: float, rounds: int) -> Dict[str, Any]:
-        recs = [TaskRecord(task_id=r.rid, worker=f"slot{r.slot}",
-                           submit_time=r.arrived,
-                           start_time=r.first_token_t or r.arrived,
-                           end_time=r.done_t or r.arrived,
-                           cost_hint=r.prompt_len, remote=True)
-                for r in self.completed]
+        recs = self.stats.records
         tokens = sum(r.generated for r in self.completed)
         ttfts = [r.first_token_t - r.arrived for r in self.completed
                  if r.first_token_t]
@@ -176,6 +197,8 @@ class ElasticBatcher:
             "tok_per_s": tokens / wall if wall else 0.0,
             "ttft_p50": float(np.median(ttfts)) if ttfts else 0.0,
             "ttft_p99": float(np.quantile(ttfts, 0.99)) if ttfts else 0.0,
+            "peak_slots": self.stats.peak_concurrency,
+            "pool": self.stats.snapshot(),
             "characterization": characterize(recs).summary() if recs
             else {},
         }

@@ -1,0 +1,126 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+The real package is an optional dev dependency (``requirements-dev.txt``);
+when it is absent the suite must still *collect and run* (tier-1 verify
+used to abort at conftest import).  This stub implements just the API
+surface our tests use — ``given``, ``settings``, ``HealthCheck`` and the
+``integers`` / ``floats`` / ``lists`` / ``sampled_from`` / ``booleans`` /
+``just`` strategies — drawing a fixed number of examples from a seeded
+PRNG, so property tests become deterministic sampled tests.  Shrinking,
+the example database and health checks are intentionally absent:
+install real hypothesis for those.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_DEFAULT = {"max_examples": 15}
+_PROFILES = {}
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    large_base_example = "large_base_example"
+
+
+class settings:
+    """Both the decorator form (``@settings(max_examples=8)``) and the
+    profile registry (``register_profile`` / ``load_profile``)."""
+
+    def __init__(self, max_examples=None, deadline=None,
+                 suppress_health_check=(), **kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._stub_max_examples = self.max_examples
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, parent=None, **kwargs):
+        _PROFILES[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        prof = _PROFILES.get(name, {})
+        if prof.get("max_examples"):
+            _DEFAULT["max_examples"] = prof["max_examples"]
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value=-(2 ** 16), max_value=2 ** 16) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, allow_nan=None,
+           allow_infinity=None, width=None) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+def lists(elements: _Strategy, min_size=0, max_size=10, **kw) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example_from(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*strats) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.example_from(rng)
+                                       for s in strats))
+
+
+def given(*strats, **kwstrats):
+    def deco(fn):
+        def wrapper():
+            n = (getattr(wrapper, "_stub_max_examples", None)
+                 or getattr(fn, "_stub_max_examples", None)
+                 or _DEFAULT["max_examples"])
+            rng = random.Random(0xC0FFEE)  # deterministic examples
+            for _ in range(n):
+                fn(*[s.example_from(rng) for s in strats],
+                   **{k: s.example_from(rng)
+                      for k, s in kwstrats.items()})
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this stub as ``hypothesis`` in ``sys.modules``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = HealthCheck
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "just",
+                 "sampled_from", "lists", "tuples"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,200 @@
+"""The unified Pool contract (make_pool) across all four backends."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (CompletionQueue, ConcurrencyTracker,
+                        ExecutorStats, FunctionThrottledError,
+                        HybridExecutor, Pool, as_completed, make_pool,
+                        registered_pools)
+
+BACKENDS = [
+    ("local", dict(max_concurrency=3, invoke_overhead=0.0)),
+    ("elastic", dict(max_concurrency=3, invoke_overhead=0.0,
+                     invoke_rate_limit=None)),
+    ("hybrid", dict(local_concurrency=2, elastic_concurrency=3)),
+    ("sim", dict(max_concurrency=3, invoke_overhead=1e-3)),
+]
+
+
+def test_all_backends_registered():
+    assert {"local", "elastic", "hybrid", "sim",
+            "speculative"} <= set(registered_pools())
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError):
+        make_pool("no-such-backend")
+
+
+@pytest.mark.parametrize("kind,cfg", BACKENDS, ids=[b[0] for b in BACKENDS])
+def test_pool_contract(kind, cfg):
+    """One shared lifecycle for every backend: construct via make_pool,
+    submit/map, stats/records/snapshot, context manager."""
+    with make_pool(kind, **cfg) as pool:
+        assert isinstance(pool, Pool)
+        assert pool.kind == kind
+        futures = [pool.submit(lambda i=i: i * i, cost_hint=float(i))
+                   for i in range(12)]
+        assert sorted(f.result() for f in futures) \
+            == sorted(i * i for i in range(12))
+        assert pool.map(lambda x: x + 1, [1, 2, 3]) == [2, 3, 4]
+        snap = pool.snapshot()
+        assert snap["submitted"] == 15
+        assert snap["completed"] == 15
+        assert snap["failed"] == 0
+        assert 1 <= snap["peak_concurrency"] <= 5  # hybrid: 2 local + 3
+        assert len(pool.records) == 15
+        assert pool.pending() == 0
+    # context manager exit shut the pool down
+    with pytest.raises(RuntimeError):
+        pool.submit(lambda: 1)
+
+
+@pytest.mark.parametrize("kind,cfg", BACKENDS, ids=[b[0] for b in BACKENDS])
+def test_pool_rejects_none_task(kind, cfg):
+    pool = make_pool(kind, **cfg)
+    with pytest.raises(TypeError):
+        pool.submit(None)
+    pool.shutdown()
+
+
+@pytest.mark.parametrize("kind,cfg", BACKENDS, ids=[b[0] for b in BACKENDS])
+def test_as_completed_event_driven(kind, cfg):
+    with make_pool(kind, **cfg) as pool:
+        fs = [pool.submit(lambda i=i: i) for i in range(9)]
+        assert {f.result() for f in as_completed(fs, timeout=10)} \
+            == set(range(9))
+
+
+# -- throttle -----------------------------------------------------------------
+
+def test_throttle_reject_elastic():
+    ex = make_pool("elastic", max_concurrency=1, invoke_overhead=0.0,
+                   invoke_rate_limit=None, throttle_mode="reject")
+    release = threading.Event()
+    f1 = ex.submit(release.wait, 1.0)
+    with pytest.raises(FunctionThrottledError):
+        for _ in range(10):
+            ex.submit(lambda: 1)
+    release.set()
+    f1.result()
+    ex.shutdown()
+
+
+def test_throttle_reject_sim():
+    sp = make_pool("sim", max_concurrency=2, throttle_mode="reject")
+    sp.submit(lambda: 1)
+    sp.submit(lambda: 2)
+    with pytest.raises(FunctionThrottledError):
+        sp.submit(lambda: 3)
+    sp.shutdown()
+
+
+# -- failure injection + retry accounting -------------------------------------
+
+def test_failure_injection_retries_not_counted_as_failed():
+    """Regression: the retry path used to call on_finish(ok=False),
+    inflating `failed` for tasks that later succeeded."""
+    with make_pool("elastic", max_concurrency=2, invoke_overhead=0.0,
+                   invoke_rate_limit=None, failure_rate=0.4,
+                   max_attempts=50, seed=7) as ex:
+        fs = [ex.submit(lambda i=i: i) for i in range(20)]
+        assert sorted(f.result() for f in fs) == list(range(20))
+        snap = ex.snapshot()
+    assert snap["retries"] > 0
+    assert snap["failed"] == 0              # every task eventually won
+    assert snap["completed"] == 20
+    # each attempt is a billable invocation (stateless re-invoke)
+    assert snap["invocations"] == snap["submitted"] + snap["retries"]
+
+
+def test_terminal_failure_still_counts():
+    with make_pool("local", max_concurrency=1, invoke_overhead=0.0,
+                   max_attempts=2) as ex:
+        f = ex.submit(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            f.result(timeout=5)
+        snap = ex.snapshot()
+    assert snap["failed"] == 1
+    assert snap["retries"] == 1             # one requeue before giving up
+    assert snap["completed"] == 0
+
+
+def test_sim_pool_delivers_exceptions():
+    with make_pool("sim", max_concurrency=2) as sp:
+        f = sp.submit(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            f.result()
+        assert sp.snapshot()["failed"] == 1
+
+
+# -- as_completed / CompletionQueue timeout paths -----------------------------
+
+def test_as_completed_timeout():
+    release = threading.Event()
+    with make_pool("local", max_concurrency=1, invoke_overhead=0.0) as ex:
+        f = ex.submit(release.wait, 5.0)
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError, match="still pending"):
+            list(as_completed([f], timeout=0.05))
+        # event-driven wait must still respect the deadline promptly
+        assert time.monotonic() - t0 < 1.0
+        release.set()
+        f.result()
+
+
+def test_completion_queue_empty_lookup():
+    with pytest.raises(LookupError):
+        CompletionQueue().next(timeout=0.01)
+
+
+def test_completion_queue_already_done_futures():
+    with make_pool("local", max_concurrency=2, invoke_overhead=0.0) as ex:
+        fs = [ex.submit(lambda i=i: i) for i in range(4)]
+        for f in fs:
+            f.result()
+        cq = CompletionQueue(fs)  # registered after completion
+        got = {cq.next(timeout=1).result() for _ in range(4)}
+        assert got == set(range(4))
+
+
+# -- hybrid combined peak (shared notification layer) -------------------------
+
+def test_tracker_reports_true_peak_not_sum():
+    """Two pools peaking at different times: the sum of per-pool peaks
+    (the old documented upper bound) overcounts; the shared tracker
+    doesn't."""
+    a, b = ExecutorStats(), ExecutorStats()
+    tracker = ConcurrencyTracker()
+    a.trackers.append(tracker)
+    b.trackers.append(tracker)
+    a.on_start(); a.on_start()              # pool A peaks at 2
+    a.on_finish(None, True); a.on_finish(None, True)
+    b.on_start(); b.on_start()              # pool B peaks at 2, later
+    b.on_finish(None, True); b.on_finish(None, True)
+    assert a.peak_concurrency + b.peak_concurrency == 4   # upper bound
+    assert tracker.peak == 2                              # true peak
+
+
+def test_hybrid_combined_peak_is_true_simultaneous_max():
+    hy = HybridExecutor(local_concurrency=2, elastic_concurrency=8)
+    barrier = threading.Barrier(5)
+    fs = [hy.submit(barrier.wait, 10) for _ in range(5)]
+    for f in fs:
+        f.result()
+    assert hy.stats.peak_concurrency == 5
+    # true peak can never exceed the old per-pool-sum upper bound
+    assert hy.stats.peak_concurrency <= \
+        (hy.local.stats.peak_concurrency
+         + hy.elastic.stats.peak_concurrency)
+    hy.shutdown()
+
+
+def test_speculative_pool_via_make_pool():
+    with make_pool("speculative", inner="local",
+                   inner_cfg=dict(max_concurrency=2, invoke_overhead=0.0),
+                   floor_s=10.0) as pool:
+        assert isinstance(pool, Pool)
+        assert pool.map(lambda x: x * 3, [1, 2]) == [3, 6]

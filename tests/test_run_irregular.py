@@ -1,0 +1,212 @@
+"""The generic run_irregular driver: all three paper workloads, every
+backend, controllers, speculation, timeout."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.algorithms import (MSParams, RMATParams, UTSParams,
+                              bc_single_node, bc_spec, ms_spec,
+                              naive_render, rmat_graph, uts_sequential,
+                              uts_spec)
+from repro.core import (StagedController, TaskShape, WorkSpec,
+                        make_pool, run_irregular)
+
+UTS_P = UTSParams(seed=19, b0=4.0, max_depth=6, chunk=1024)
+MS_P = MSParams(width=64, height=64, max_dwell=48,
+                initial_subdivision=2, max_depth=3)
+
+BACKENDS = [
+    ("local", dict(max_concurrency=3, invoke_overhead=0.0)),
+    ("elastic", dict(max_concurrency=8, invoke_overhead=5e-4,
+                     invoke_rate_limit=None)),
+    ("hybrid", dict(local_concurrency=2, elastic_concurrency=8)),
+    ("sim", dict(max_concurrency=64, invoke_overhead=1e-3)),
+]
+
+
+@pytest.fixture(scope="module")
+def uts_expected():
+    return uts_sequential(UTS_P)
+
+
+@pytest.mark.parametrize("kind,cfg", BACKENDS, ids=[b[0] for b in BACKENDS])
+def test_uts_on_every_backend(kind, cfg, uts_expected):
+    """The acceptance bar: one WorkSpec, four interchangeable pools."""
+    with make_pool(kind, **cfg) as pool:
+        r = run_irregular(pool, uts_spec(UTS_P), shape=TaskShape(8, 500))
+    assert r.output == uts_expected
+    assert r.tasks >= 1
+    assert r.pool_snapshot["completed"] == r.tasks
+
+
+def test_uts_with_controller_through_driver(uts_expected):
+    ctrl = StagedController()
+    with make_pool("local", max_concurrency=4,
+                   invoke_overhead=0.0) as pool:
+        r = run_irregular(pool, uts_spec(UTS_P), shape=TaskShape(8, 300),
+                          controller=ctrl)
+    assert r.output == uts_expected
+    assert r.controller_transitions == ctrl.transitions
+
+
+def test_uts_initial_shape_ramp(uts_expected):
+    """The paper's wide ramp-up split applies to the seed only."""
+    with make_pool("local", max_concurrency=4,
+                   invoke_overhead=0.0) as pool:
+        r = run_irregular(pool, uts_spec(UTS_P), shape=TaskShape(4, 400),
+                          initial_shape=TaskShape(32, 400))
+    assert r.output == uts_expected
+
+
+def test_uts_on_sim_pool_virtual_time(uts_expected):
+    """Virtual-time drive: exact counts, paper-scale concurrency, a
+    makespan bounded below by work/workers."""
+    pool = make_pool("sim", max_concurrency=32, invoke_overhead=2e-3,
+                     duration_fn=lambda task, result: 1e-6 * result[0])
+    r = run_irregular(pool, uts_spec(UTS_P), shape=TaskShape(8, 400))
+    assert r.output == uts_expected
+    assert r.peak_concurrency <= 32
+    work = uts_expected * 1e-6 + r.tasks * 2e-3
+    assert pool.virtual_time_s >= work / 32 * 0.99
+    pool.shutdown()
+
+
+def test_mariani_silver_spec_matches_oracle():
+    oracle = naive_render(MS_P)
+    with make_pool("hybrid", local_concurrency=2,
+                   elastic_concurrency=4) as pool:
+        r = run_irregular(pool, ms_spec(MS_P))
+    assert np.array_equal(r.output["image"], oracle)
+    assert r.output["filled"] + r.output["evaluated"] \
+        == MS_P.width * MS_P.height
+    assert r.output["filled"] > 0  # adjacency optimization fired
+
+
+def test_bc_spec_matches_single_node():
+    p = RMATParams(scale=6, seed=2)
+    expected = bc_single_node(rmat_graph(p), n_tasks=1)
+    with make_pool("elastic", max_concurrency=4, invoke_overhead=0.0,
+                   invoke_rate_limit=None) as pool:
+        r = run_irregular(pool, bc_spec(p, n_tasks=8))
+    np.testing.assert_allclose(r.output, expected, rtol=1e-4, atol=1e-3)
+    assert r.tasks == 8
+
+
+def test_run_irregular_timeout():
+    never = threading.Event()
+    spec = WorkSpec(name="stuck",
+                    execute=lambda item, shape: never.wait(5.0),
+                    seed=lambda shape: [0])
+    with make_pool("local", max_concurrency=1,
+                   invoke_overhead=0.0) as pool:
+        with pytest.raises(TimeoutError, match="stuck"):
+            run_irregular(pool, spec, timeout=0.05)
+        never.set()
+
+
+def test_speculative_redispatch_rescues_straggler():
+    """A task that stalls on its first dispatch is cloned after the
+    deadline; the clone's (instant) completion wins and the run
+    finishes long before the straggler would."""
+    stalled = threading.Event()
+    first = threading.Event()
+
+    def body(item, shape):
+        if not first.is_set():       # only the original dispatch stalls
+            first.set()
+            stalled.wait(10.0)
+        return item * 10
+
+    spec = WorkSpec(name="straggler", execute=body,
+                    seed=lambda shape: [7],
+                    reduce=lambda s, r: s + r, init=lambda: 0)
+    with make_pool("local", max_concurrency=2,
+                   invoke_overhead=0.0) as pool:
+        t0 = time.monotonic()
+        r = run_irregular(pool, spec, speculative_deadline=0.05)
+        elapsed = time.monotonic() - t0
+        stalled.set()                # release the abandoned original
+    assert r.output == 70
+    assert r.speculated == 1
+    assert elapsed < 5.0
+
+
+def test_speculation_fires_while_completions_flow():
+    """Regression: the straggler scan must also run on the completion
+    path — a busy stream of finishing tasks used to starve the idle
+    TimeoutError branch and delay clones until the queue went quiet."""
+    t0 = time.monotonic()
+    first = threading.Event()
+    stall = threading.Event()
+    clone_at = []
+
+    def body(item, shape):
+        if item == "straggler":
+            if not first.is_set():          # original dispatch stalls
+                first.set()
+                stall.wait(15.0)
+            else:                           # the rescue clone
+                clone_at.append(time.monotonic() - t0)
+            return 1
+        time.sleep(0.02)                    # steady completion stream
+        return 0
+
+    spec = WorkSpec(
+        name="busy-straggler",
+        execute=body,
+        seed=lambda shape: ["straggler"] + ["quick"] * 60,
+        reduce=lambda s, r: s + r,
+        init=lambda: 0,
+    )
+    with make_pool("local", max_concurrency=3,
+                   invoke_overhead=0.0) as pool:
+        r = run_irregular(pool, spec, speculative_deadline=0.1)
+        stall.set()
+    assert r.output == 1
+    assert r.speculated == 1
+    # 60 quick tasks on the 2 free workers keep completions arriving
+    # for >= 0.6s; the rescue must land during that stream, well
+    # before the straggler's 15s stall would have drained it
+    assert clone_at and clone_at[0] < 5.0
+
+
+def test_failed_future_not_overwritten_by_late_clone():
+    """Regression: a speculative clone completing after the original
+    terminally failed used to flip state to DONE with the stale
+    exception still set."""
+    from repro.core import Task
+    from repro.core.futures import ElasticFuture, TaskState
+
+    f = ElasticFuture(Task(fn=lambda: None))
+    boom = RuntimeError("terminal failure")
+    f._set_exception(boom)
+    f._set_result(42)                       # late clone: must lose
+    assert f.state is TaskState.FAILED
+    with pytest.raises(RuntimeError, match="terminal failure"):
+        f.result(timeout=0)
+
+
+def test_sim_pool_duration_fn_skipped_on_failure():
+    """Regression: duration_fn(task, None) used to raise out of
+    submit() when the task body failed, masking the real exception."""
+    with make_pool("sim", max_concurrency=2,
+                   duration_fn=lambda task, result: 1e-6 * result[0]) as sp:
+        ok = sp.submit(lambda: (100, None))
+        bad = sp.submit(lambda: 1 / 0)      # must not TypeError here
+        assert ok.result()[0] == 100
+        with pytest.raises(ZeroDivisionError):
+            bad.result()
+
+
+def test_driver_counts_only_its_dispatches():
+    """`tasks` is the driver's dispatch count even on a shared pool."""
+    with make_pool("local", max_concurrency=2,
+                   invoke_overhead=0.0) as pool:
+        pool.submit(lambda: None).result()  # unrelated traffic
+        spec = WorkSpec(name="map", execute=lambda item, shape: item,
+                        seed=lambda shape: range(5))
+        r = run_irregular(pool, spec)
+    assert r.tasks == 5
+    assert r.pool_snapshot["submitted"] == 6

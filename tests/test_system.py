@@ -25,11 +25,14 @@ def test_elasticity_beats_static_pool_on_uts():
     expected = uts_sequential(p)
     shape = TaskShape(split_factor=8, iters=400)
 
-    with LocalExecutor(1, invoke_overhead=0.002) as narrow:
+    # 20ms ~ the paper's measured FaaS invocation overhead (Table 4);
+    # the floor must dominate the (GIL-serialized) task bodies for the
+    # overlap effect to be observable on a small shared host.
+    with LocalExecutor(1, invoke_overhead=0.02) as narrow:
         t0 = time.monotonic()
         r1 = uts_parallel(narrow, p, shape=shape)
         t_narrow = time.monotonic() - t0
-    with ElasticExecutor(max_concurrency=16, invoke_overhead=0.002,
+    with ElasticExecutor(max_concurrency=16, invoke_overhead=0.02,
                          invoke_rate_limit=None) as wide:
         t0 = time.monotonic()
         r2 = uts_parallel(wide, p, shape=shape)

@@ -1,11 +1,14 @@
 """Benchmark harness — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = ';'-separated
-key=value pairs).  Everything is laptop-scaled but structurally faithful
-to the paper's experiments; the full-size parameters live in
-``repro.configs.paper_workloads`` and run unchanged on a pod.
+key=value pairs); ``--json PATH`` additionally writes the same rows as
+structured JSON (``[{"name", "us_per_call", "derived": {...}}, ...]``)
+so the perf trajectory can be tracked across PRs.  Everything is
+laptop-scaled but structurally faithful to the paper's experiments; the
+full-size parameters live in ``repro.configs.paper_workloads`` and run
+unchanged on a pod.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig4 ...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig4 ...] [--json PATH]
 """
 from __future__ import annotations
 
@@ -30,12 +33,25 @@ from repro.configs.paper_workloads import (BC_SCALED, BC_SCALED_TASKS,
                                            MS_SCALED, UTS_SCALED)
 
 ROWS = []
+JSON_ROWS = []
+
+
+def _jsonable(v):
+    """numpy scalars/bools -> native Python so json.dump round-trips."""
+    if isinstance(v, (np.integer, np.floating, np.bool_)):
+        return v.item()
+    return v
 
 
 def emit(name: str, us_per_call: float, **derived) -> None:
     kv = ";".join(f"{k}={v}" for k, v in derived.items())
     row = f"{name},{us_per_call:.1f},{kv}"
     ROWS.append(row)
+    JSON_ROWS.append({
+        "name": name,
+        "us_per_call": round(float(us_per_call), 1),
+        "derived": {k: _jsonable(v) for k, v in derived.items()},
+    })
     print(row, flush=True)
 
 
@@ -331,6 +347,49 @@ def fig7_9_cost_performance() -> None:
                                          cost_emr), 0))
 
 
+# -- Batch fusion: run_irregular with vs without execute_batch -------------------
+
+def fig_batch_fusion() -> None:
+    """Batched vs per-task execution on the sim pool (UTS + MS).
+
+    Same WorkSpec, same virtual pool (few workers, FaaS-grade 13 ms
+    invocation overhead); ``batching=True`` drains ready items through
+    ``submit_batch`` into fused vectorized calls.  Outputs are asserted
+    identical; the win is amortized per-invocation overhead (the
+    application-level optimization lever of §5.2)."""
+    cases = (
+        ("uts", uts_spec(UTSParams(seed=19, b0=4.0, max_depth=8,
+                                   chunk=2048)),
+         dict(shape=TaskShape(16, 1000))),
+        ("ms", ms_spec(MSParams(width=256, height=256, max_dwell=128,
+                                initial_subdivision=4, max_depth=4)),
+         dict()),
+    )
+    derived = {}
+    us = 0.0  # headline: summed batched virtual time across the cases
+    for name, spec, kw in cases:
+        outs = {}
+        for mode, batching in (("per_task", False), ("batched", True)):
+            with make_pool("sim", max_concurrency=4,
+                           invoke_overhead=13e-3) as pool:
+                r = run_irregular(pool, spec, batching=batching, **kw)
+                outs[mode] = (pool.virtual_time_s, r, pool.snapshot())
+        vt_p, r_p, s_p = outs["per_task"]
+        vt_b, r_b, s_b = outs["batched"]
+        if name == "uts":
+            assert r_p.output == r_b.output
+        else:
+            assert np.array_equal(r_p.output["image"],
+                                  r_b.output["image"])
+        us += vt_b * 1e6
+        derived[f"{name}_per_task_vs"] = round(vt_p, 4)
+        derived[f"{name}_batched_vs"] = round(vt_b, 4)
+        derived[f"{name}_per_task_invocations"] = s_p["invocations"]
+        derived[f"{name}_batched_invocations"] = s_b["invocations"]
+        derived[f"{name}_speedup"] = round(vt_p / max(vt_b, 1e-12), 2)
+    emit("fig_batch_fusion", us, **derived)
+
+
 # -- Roofline table (from the dry-run artifacts) ----------------------------------
 
 def roofline_from_dryrun() -> None:
@@ -371,6 +430,7 @@ BENCHES = {
     "fig5_table6": fig5_table6_mariani_silver,
     "fig6": fig6_bc_scaling,
     "fig7_9": fig7_9_cost_performance,
+    "fig_batch_fusion": fig_batch_fusion,
     "roofline": roofline_from_dryrun,
 }
 
@@ -378,6 +438,10 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", choices=list(BENCHES))
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write rows as structured JSON "
+                         "(name, us_per_call, derived kv) for "
+                         "cross-PR perf tracking")
     args = ap.parse_args()
     names = args.only or list(BENCHES)
     print("name,us_per_call,derived")
@@ -386,6 +450,10 @@ def main() -> None:
             BENCHES[name]()
         except Exception as e:  # noqa: BLE001 — keep the harness going
             emit(name, 0.0, status=f"ERROR {type(e).__name__}: {e}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(JSON_ROWS, f, indent=2, sort_keys=True)
+            f.write("\n")
     fails = [r for r in ROWS if "ERROR" in r]
     if fails:
         sys.exit(1)

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import functools
 import time
+import warnings
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
@@ -197,9 +198,22 @@ def bc_spec(
     def execute(block: np.ndarray, shape: TaskShape) -> np.ndarray:
         return _bc_task(p, block, shipped)
 
+    def execute_batch(blocks: List[np.ndarray],
+                      shape: TaskShape) -> List[np.ndarray]:
+        """Fused task body: the queued source blocks are stacked into
+        one ``bc_batch`` invocation (one forward/backward sweep over the
+        union of sources).  The summed dependency map lands on the first
+        slot; ``reduce`` is a plain sum, so the final betweenness equals
+        the per-task path up to float summation order."""
+        sources = np.concatenate([np.asarray(b) for b in blocks])
+        partial = _bc_task(p, sources, shipped)
+        return ([partial]
+                + [np.zeros(n, partial.dtype)] * (len(blocks) - 1))
+
     return WorkSpec(
         name="betweenness_centrality",
         execute=execute,
+        execute_batch=execute_batch,
         seed=seed,
         reduce=lambda total, partial: total + partial,
         init=lambda: np.zeros(n, np.float64),
@@ -216,6 +230,10 @@ def betweenness_centrality(
     adj: Optional[np.ndarray] = None,
 ) -> BCResult:
     """Deprecated shim over ``run_irregular(pool, bc_spec(p, ...))``."""
+    warnings.warn(
+        "betweenness_centrality is deprecated; use "
+        "run_irregular(pool, bc_spec(p, ...)) instead",
+        DeprecationWarning, stacklevel=2)
     t0 = time.monotonic()
     r = run_irregular(executor, bc_spec(
         p, n_tasks=n_tasks, regenerate_graph=regenerate_graph, adj=adj))

@@ -15,6 +15,7 @@ for both border strips and leaf rectangles.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any, Dict, List, Optional, Tuple
@@ -27,7 +28,8 @@ from ..kernels.mandelbrot.ops import mandelbrot
 from ..kernels.mandelbrot.ref import coords
 
 __all__ = ["MSParams", "Rect", "Action", "RectResult", "ms_spec",
-           "evaluate_rect", "mariani_silver", "naive_render", "MSResult"]
+           "evaluate_rect", "evaluate_rects", "mariani_silver",
+           "naive_render", "MSResult"]
 
 
 @dataclass(frozen=True)
@@ -86,8 +88,8 @@ def _pixel_coords(rect: Rect, p: MSParams):
     return jnp.asarray(c_re, jnp.float32), jnp.asarray(c_im, jnp.float32)
 
 
-def _border_dwells(rect: Rect, p: MSParams) -> np.ndarray:
-    """Dwells of the rectangle's border pixels (flattened)."""
+def _border_coords(rect: Rect, p: MSParams):
+    """Flattened coordinates of the rect's border pixels (1-D pair)."""
     c_re, c_im = _pixel_coords(rect, p)
     # Evaluate the 4 border strips as one [2, max(w,h)]-ish batch: cheaper
     # to just gather border coords into a single row vector.
@@ -95,21 +97,73 @@ def _border_dwells(rect: Rect, p: MSParams) -> np.ndarray:
     bot = (c_re[-1, :], c_im[-1, :])
     left = (c_re[1:-1, 0], c_im[1:-1, 0])
     right = (c_re[1:-1, -1], c_im[1:-1, -1])
-    bre = jnp.concatenate([top[0], bot[0], left[0], right[0]])[None, :]
-    bim = jnp.concatenate([top[1], bot[1], left[1], right[1]])[None, :]
-    return np.asarray(mandelbrot(bre, bim, p.max_dwell))[0]
+    bre = jnp.concatenate([top[0], bot[0], left[0], right[0]])
+    bim = jnp.concatenate([top[1], bot[1], left[1], right[1]])
+    return bre, bim
+
+
+def _border_dwells(rect: Rect, p: MSParams) -> np.ndarray:
+    """Dwells of the rectangle's border pixels (flattened)."""
+    bre, bim = _border_coords(rect, p)
+    return np.asarray(mandelbrot(bre[None, :], bim[None, :],
+                                 p.max_dwell))[0]
+
+
+def _classify(rect: Rect, border: np.ndarray,
+              p: MSParams) -> RectResult:
+    """FILL / SPLIT / leaf decision from the border dwells; leaf
+    rectangles come back with ``dwell_array=None`` — the caller
+    evaluates their interiors (singly or batched)."""
+    if border.size and np.all(border == border[0]):
+        return RectResult(rect, Action.FILL, dwell_to_fill=int(border[0]))
+    if rect.depth >= p.max_depth or rect.w <= 2 or rect.h <= 2:
+        return RectResult(rect, Action.SET_DWELL_ARRAY)
+    return RectResult(rect, Action.SPLIT)
 
 
 def evaluate_rect(rect: Rect, p: MSParams) -> RectResult:
     """Task body — paper Listing 3 (``Callable.call``)."""
-    border = _border_dwells(rect, p)
-    if border.size and np.all(border == border[0]):
-        return RectResult(rect, Action.FILL, dwell_to_fill=int(border[0]))
-    if rect.depth >= p.max_depth or rect.w <= 2 or rect.h <= 2:
+    res = _classify(rect, _border_dwells(rect, p), p)
+    if res.action is Action.SET_DWELL_ARRAY:
         c_re, c_im = _pixel_coords(rect, p)
-        dwell = np.asarray(mandelbrot(c_re, c_im, p.max_dwell))
-        return RectResult(rect, Action.SET_DWELL_ARRAY, dwell_array=dwell)
-    return RectResult(rect, Action.SPLIT)
+        res.dwell_array = np.asarray(mandelbrot(c_re, c_im, p.max_dwell))
+    return res
+
+
+def evaluate_rects(rects: List[Rect], p: MSParams) -> List[RectResult]:
+    """Fused task body: every border strip of the batch goes through ONE
+    kernel dispatch (a single [1, sum(border lens)] row vector), then
+    every leaf interior through one more (pixels flattened end to end).
+    The dwell of each pixel is independent of its neighbours, so the
+    per-rect results are bit-identical to :func:`evaluate_rect`."""
+    if not rects:
+        return []
+    borders = [_border_coords(r, p) for r in rects]
+    lens = [int(b[0].shape[0]) for b in borders]
+    bre = jnp.concatenate([b[0] for b in borders])[None, :]
+    bim = jnp.concatenate([b[1] for b in borders])[None, :]
+    dwells = np.asarray(mandelbrot(bre, bim, p.max_dwell))[0]
+    results: List[RectResult] = []
+    off = 0
+    for rect, n in zip(rects, lens):
+        results.append(_classify(rect, dwells[off:off + n], p))
+        off += n
+    leaves = [r for r in results if r.action is Action.SET_DWELL_ARRAY]
+    if leaves:
+        flats = []
+        for res in leaves:
+            c_re, c_im = _pixel_coords(res.rect, p)
+            flats.append((c_re.ravel(), c_im.ravel()))
+        fre = jnp.concatenate([f[0] for f in flats])[None, :]
+        fim = jnp.concatenate([f[1] for f in flats])[None, :]
+        flat_dwell = np.asarray(mandelbrot(fre, fim, p.max_dwell))[0]
+        off = 0
+        for res in leaves:
+            r = res.rect
+            res.dwell_array = \
+                flat_dwell[off:off + r.w * r.h].reshape(r.h, r.w)
+            off += r.w * r.h
+    return results
 
 
 def _split_rect(rect: Rect, split: int) -> List[Rect]:
@@ -155,6 +209,10 @@ def ms_spec(p: MSParams) -> WorkSpec:
     def execute(rect: Rect, shape: TaskShape) -> RectResult:
         return evaluate_rect(rect, p)
 
+    def execute_batch(rects: List[Rect],
+                      shape: TaskShape) -> List[RectResult]:
+        return evaluate_rects(list(rects), p)
+
     def split(res: RectResult, shape: TaskShape) -> List[Rect]:
         if res.action is Action.SPLIT:
             return _split_rect(res.rect, p.split)
@@ -177,6 +235,7 @@ def ms_spec(p: MSParams) -> WorkSpec:
     return WorkSpec(
         name="mariani_silver",
         execute=execute,
+        execute_batch=execute_batch,
         seed=seed,
         split=split,
         reduce=reduce,
@@ -187,6 +246,10 @@ def ms_spec(p: MSParams) -> WorkSpec:
 
 def mariani_silver(executor: Pool, p: MSParams) -> MSResult:
     """Deprecated shim over ``run_irregular(pool, ms_spec(p))``."""
+    warnings.warn(
+        "mariani_silver is deprecated; use "
+        "run_irregular(pool, ms_spec(p)) instead",
+        DeprecationWarning, stacklevel=2)
     t0 = time.monotonic()
     r = run_irregular(executor, ms_spec(p))
     return MSResult(

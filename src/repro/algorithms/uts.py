@@ -24,6 +24,7 @@ are identical (each node expanded exactly once).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
@@ -39,8 +40,8 @@ from ..core import (
 )
 import jax
 
+from ..kernels.dispatch import bucket
 from ..kernels.uts_hash.ops import (
-    _bucket,
     geometric_children,
     root_digest,
     uts_child_digests,
@@ -117,7 +118,7 @@ def _expand_generation(digests: np.ndarray, depths: np.ndarray,
     if on_tpu:
         # bucket-pad -> bounded set of compiled kernels; padding rows sit
         # at max_depth and thus produce zero children.
-        nb = _bucket(n, floor=min(params.chunk, 4096))
+        nb = bucket(n, floor=min(params.chunk, 4096))
         dig_p = np.pad(digests, ((0, 0), (0, nb - n)))
         dep_p = np.pad(depths, (0, nb - n),
                        constant_values=params.max_depth)
@@ -213,6 +214,20 @@ def uts_spec(params: UTSParams) -> WorkSpec:
     def execute(bag: Bag, shape: TaskShape) -> Tuple[int, Bag]:
         return expand_bag(bag, shape.iters, params)
 
+    def execute_batch(bags: List[Bag],
+                      shape: TaskShape) -> List[Tuple[int, Bag]]:
+        """Fused task body: the queued bags are merged into one frontier
+        and expanded through a single sequence of vectorized kernel
+        invocations with the batch's combined iteration budget.  Every
+        node is still expanded exactly once, so the run's total count is
+        identical to the per-task path; the leftover comes back on the
+        first slot and is re-split by the driver's ``split`` hook."""
+        merged = Bag.merge(list(bags))
+        count, leftover = expand_bag(merged, shape.iters * len(bags),
+                                     params)
+        return ([(count, leftover)]
+                + [(0, Bag.empty())] * (len(bags) - 1))
+
     def split(result: Tuple[int, Bag], shape: TaskShape) -> List[Bag]:
         _, leftover = result
         return _resize(leftover, shape) if leftover.size else []
@@ -220,6 +235,7 @@ def uts_spec(params: UTSParams) -> WorkSpec:
     return WorkSpec(
         name="uts",
         execute=execute,
+        execute_batch=execute_batch,
         seed=lambda shape: _resize(Bag.root(params), shape),
         split=split,
         reduce=lambda total, result: total + result[0],
@@ -242,6 +258,10 @@ def uts_parallel(
     Kept for source compatibility with the per-algorithm master loops;
     new code should drive ``uts_spec`` directly (Listing 2's loop and
     the Listing 5 controller both live in ``repro.core.irregular``)."""
+    warnings.warn(
+        "uts_parallel is deprecated; use "
+        "run_irregular(pool, uts_spec(params)) instead",
+        DeprecationWarning, stacklevel=2)
     initial = (TaskShape(initial_split, shape.iters)
                if initial_split is not None else None)
     r = run_irregular(executor, uts_spec(params), shape=shape,

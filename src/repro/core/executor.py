@@ -329,6 +329,8 @@ class LocalExecutor(BaseExecutor):
 
     kind = "local"
     remote = False
+    # one host thread can run a fused batch body: submit_batch fuses
+    supports_batching = True
 
     def __init__(self, max_concurrency: int = 8, **kw: Any) -> None:
         kw.setdefault("invoke_overhead", 18e-6)

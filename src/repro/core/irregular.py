@@ -12,8 +12,12 @@ a declarative :class:`WorkSpec`:
     split(result, shape) -> follow-up items   (nested parallelism)
     reduce(state, result)-> state             (master-side fold)
 
-plus ``init``/``finalize`` for the accumulator and ``cost_hint`` for
-characterization.  Any :class:`~repro.core.pool.Pool` backend works —
+plus ``init``/``finalize`` for the accumulator, ``cost_hint`` for
+characterization, and an optional ``execute_batch`` fused body: with
+``run_irregular(..., batching=True)`` the driver drains ready items
+through ``pool.submit_batch`` in chunks of up to ``idle_capacity``,
+replacing N tiny per-task kernel dispatches with one vectorized call
+(the application-level overhead amortization of §5.2).  Any :class:`~repro.core.pool.Pool` backend works —
 ``local``, ``elastic``, ``hybrid``, or the virtual-time ``sim`` pool —
 and stragglers can be speculatively re-dispatched (stateless tasks make
 duplication safe; the first completion wins at the future level).
@@ -64,6 +68,13 @@ class WorkSpec:
     finalize: Callable[[Any], Any] = lambda state: state
     #: a-priori work estimate per item (characterization / cost model)
     cost_hint: Callable[[Any], float] = lambda item: 1.0
+    #: optional fused task body: (items, shape) -> one result per item.
+    #: Must be equivalent to mapping ``execute`` over the items — the
+    #: driver may fuse any subset of ready items through it (one
+    #: vectorized kernel invocation instead of N tiny ones) when
+    #: ``run_irregular(..., batching=True)``.
+    execute_batch: Optional[
+        Callable[[List[Any], TaskShape], List[Any]]] = None
     #: default task shape (split_factor, iters) when none is passed
     shape: TaskShape = TaskShape(1, 1)
 
@@ -105,6 +116,7 @@ def run_irregular(
     controller: Optional[Any] = None,
     speculative_deadline: Optional[float] = None,
     timeout: Optional[float] = None,
+    batching: Optional[bool] = None,
 ) -> IrregularResult:
     """Drive ``spec`` over ``pool`` to completion.
 
@@ -119,9 +131,30 @@ def run_irregular(
                           worker; first settlement wins, the loser is
                           ignored (meaningful on real-time pools only)
     timeout               overall wall-clock bound -> ``TimeoutError``
+    batching              True: drain ready items through
+                          ``pool.submit_batch`` in chunks of up to
+                          ``pool.idle_capacity()`` items, executed by
+                          ``spec.execute_batch`` as one vectorized call
+                          on fusing backends (``local``/``sim``) and
+                          decomposed per item elsewhere.  Default/False:
+                          exact per-task dispatch.  ``tasks`` counts
+                          items either way.  Fusing trades parallel
+                          slack for invocation cost — the right trade
+                          for tiny overhead-dominated tasks (batching's
+                          premise), the wrong one when a single item's
+                          compute dwarfs the invocation overhead.
+                          Items inside a fused call are not
+                          individually tracked as RUNNING, so
+                          ``speculative_deadline`` does not clone them
+                          (the per-item decomposed path still
+                          speculates normally).
     """
     t0 = time.monotonic()
     shape = shape or spec.shape
+    if batching and spec.execute_batch is None:
+        raise ValueError(
+            f"{spec.name}: batching=True requires spec.execute_batch")
+    batching = bool(batching)
     state = spec.init()
     cq = CompletionQueue()
     outstanding: Dict[ElasticFuture, _Dispatch] = {}
@@ -135,8 +168,45 @@ def run_irregular(
         cq.add(f)
         n_dispatched += 1
 
-    for item in spec.seed(initial_shape or shape):
-        dispatch(item, initial_shape or shape)
+    def dispatch_ready(items: List[Any], shp: TaskShape) -> None:
+        """Issue a wave of ready items: fused through ``submit_batch``
+        in idle-capacity-bounded chunks when batching, per item
+        otherwise (small tiny-task dispatches are the per-invocation
+        overhead the fusion exists to amortize)."""
+        nonlocal n_dispatched
+        if not batching or len(items) <= 1:
+            for item in items:
+                dispatch(item, shp)
+            return
+        # fusing pools (local/sim) expose max_concurrency; decomposing
+        # pools ignore the chunking, so the fallback width is moot there
+        width = max(1, getattr(pool, "max_concurrency", 1))
+        i = 0
+        while i < len(items):
+            # up to idle_capacity items per fused call (pool width once
+            # saturated, so chunks stay bounded and freed workers always
+            # find fusable units rather than one serialized mega-call).
+            # Fusing a whole wave into one slot deliberately trades
+            # parallel slack for invocation cost: with tiny tasks —
+            # batching's premise — overhead dominates, so one fused
+            # call matches the wall time of k parallel dispatches at
+            # 1/k the invocations (see fig_batch_fusion).
+            cap = pool.idle_capacity() or width
+            chunk = items[i:i + cap]
+            i += len(chunk)
+            futures = pool.submit_batch(
+                lambda batch, _s=shp: spec.execute_batch(batch, _s),
+                chunk,
+                item_fn=lambda item, _s=shp: spec.execute(item, _s),
+                cost_hints=[spec.cost_hint(item) for item in chunk])
+            now = time.monotonic()
+            for f, item in zip(futures, chunk):
+                outstanding[f] = _Dispatch(item, shp, now)
+                cq.add(f)
+                n_dispatched += 1
+
+    dispatch_ready(list(spec.seed(initial_shape or shape)),
+                   initial_shape or shape)
 
     deadline = None if timeout is None else t0 + timeout
     speculated = 0
@@ -181,8 +251,7 @@ def run_irregular(
         state = spec.reduce(state, f.result())
         if controller is not None:
             shape = controller.update(len(outstanding))
-        for child in spec.split(f.result(), shape):
-            dispatch(child, shape)
+        dispatch_ready(list(spec.split(f.result(), shape)), shape)
 
     snap = pool.snapshot()
     return IrregularResult(

@@ -27,9 +27,9 @@ Drive any of them with ``repro.core.run_irregular`` and a ``WorkSpec``.
 from __future__ import annotations
 
 import abc
-from typing import Any, Callable, Dict, List, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from .futures import ElasticFuture, TaskRecord
+from .futures import ElasticFuture, Task, TaskRecord, TaskState
 
 __all__ = ["Pool", "make_pool", "register_pool", "registered_pools"]
 
@@ -39,14 +39,24 @@ class Pool(abc.ABC):
 
     Subclasses provide ``submit``/``shutdown``/``pending``/
     ``idle_capacity`` and a ``stats`` object exposing ``records`` and
-    ``snapshot()``; everything else (``map``, ``records``,
-    ``snapshot``, context management) is inherited.
+    ``snapshot()``; everything else (``map``, ``submit_batch``,
+    ``records``, ``snapshot``, context management) is inherited.
+
+    ``submit_batch`` is part of the contract: backends that set
+    ``supports_batching`` (``local``, ``sim`` — one worker can run a
+    fused body) execute the whole batch as ONE submission and fan the
+    per-item results out; the rest (``elastic``, ``hybrid``,
+    ``speculative`` — each FaaS invocation is a separate function)
+    decompose into per-item submissions, which is exactly the per-task
+    path.
     """
 
     #: human-readable backend kind ("local" | "elastic" | ...)
     kind: str = "abstract"
     #: whether completions are billed as remote (FaaS) invocations
     remote: bool = False
+    #: whether ``submit_batch`` fuses items into one invocation natively
+    supports_batching: bool = False
 
     @abc.abstractmethod
     def submit(self, fn: Callable[..., Any], *args: Any,
@@ -70,6 +80,95 @@ class Pool(abc.ABC):
             items: Sequence[Any]) -> List[Any]:
         futures = [self.submit(fn, item) for item in items]
         return [f.result() for f in futures]
+
+    def _make_future(self, task: Task) -> ElasticFuture:
+        """Future constructor hook — virtual-time pools override this so
+        fan-out futures integrate with their event pump."""
+        return ElasticFuture(task)
+
+    def submit_batch(
+        self,
+        batch_fn: Callable[[List[Any]], List[Any]],
+        items: Sequence[Any],
+        *,
+        item_fn: Optional[Callable[[Any], Any]] = None,
+        cost_hints: Optional[Sequence[float]] = None,
+    ) -> List[ElasticFuture]:
+        """Submit ``items`` as one logical batch; one future per item.
+
+        ``batch_fn(items) -> results`` is the fused body (must return
+        one result per item, in order).  Backends with
+        ``supports_batching`` run it as a SINGLE submission — one
+        invocation billed, one worker slot — and resolve the per-item
+        futures from its return value.  Backends without it decompose
+        into per-item submissions of ``item_fn`` (default:
+        ``batch_fn([item])[0]``), preserving exact per-task semantics.
+        """
+        items = list(items)
+        if not items:
+            return []
+        hints = (list(cost_hints) if cost_hints is not None
+                 else [1.0] * len(items))
+        if len(hints) != len(items):
+            raise ValueError(
+                f"cost_hints ({len(hints)}) and items ({len(items)}) "
+                f"must align")
+        if not self.supports_batching or len(items) == 1:
+            if item_fn is None:
+                def item_fn(item: Any) -> Any:
+                    return batch_fn([item])[0]
+            futures: List[ElasticFuture] = []
+            try:
+                for item, h in zip(items, hints):
+                    futures.append(self.submit(item_fn, item,
+                                               cost_hint=h))
+            except BaseException:
+                # a mid-batch throttle/shutdown must not orphan the
+                # futures already submitted: cancel what never started
+                # (stateless tasks — running ones just finish into the
+                # stats log) before surfacing the error
+                for f in futures:
+                    f.cancel()
+                raise
+            return futures
+
+        # fused path: one carrier task, per-item futures resolved by its
+        # done-callback (first settlement wins, as everywhere else)
+        children = [
+            # fn=None: never run — resolved by the carrier's fan-out
+            self._make_future(Task(fn=None, cost_hint=h))
+            for h in hints
+        ]
+
+        def carrier() -> List[Any]:
+            return batch_fn(items)
+
+        def fan_out(f: ElasticFuture) -> None:
+            if f.state is TaskState.FAILED:
+                for c in children:
+                    c._set_exception(f._exc)
+                return
+            if f.state is TaskState.CANCELLED:
+                for c in children:
+                    c.cancel()
+                return
+            results = f._result
+            if (not isinstance(results, (list, tuple))
+                    or len(results) != len(items)):
+                got = (len(results) if isinstance(results, (list, tuple))
+                       else type(results).__name__)
+                exc = TypeError(
+                    f"batch body must return {len(items)} results, "
+                    f"got {got}")
+                for c in children:
+                    c._set_exception(exc)
+                return
+            for c, r in zip(children, results):
+                c._set_result(r)
+
+        cf = self.submit(carrier, cost_hint=float(sum(hints)))
+        cf.add_done_callback(fan_out)
+        return children
 
     @property
     def records(self) -> List[TaskRecord]:

@@ -80,6 +80,8 @@ class SimPool(Pool):
 
     kind = "sim"
     remote = True
+    # a virtual worker can run a fused batch body: submit_batch fuses
+    supports_batching = True
 
     def __init__(
         self,
@@ -111,6 +113,10 @@ class SimPool(Pool):
     def virtual_time_s(self) -> float:
         """Current virtual clock (the makespan once drained)."""
         return self._clock
+
+    def _make_future(self, task: Task) -> ElasticFuture:
+        # batch fan-out futures must pump the event heap when waited on
+        return SimFuture(task, self)
 
     # -- Pool contract -----------------------------------------------------
     def submit(self, fn: Callable[..., Any], *args: Any,

@@ -1,3 +1,20 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel packages + the shared dispatch registry.
+
+OPTIONAL layer: add ``<name>/kernel.py`` + ``ops.py`` + ``ref.py`` ONLY
+for compute hot-spots the paper itself optimizes with a custom kernel.
+
+Each package's ``ops.py`` is a *thin registration*: it declares a
+:class:`~repro.kernels.dispatch.KernelOp` (Pallas body, reference body,
+elastic axes + pad constants, bucket floor, cost hint) and exposes a
+public wrapper that calls :func:`~repro.kernels.dispatch.dispatch`.
+Backend selection, power-of-two bucket padding, and jit-cache bounding
+live once, in ``dispatch.py`` — see the README's "adding a new kernel"
+recipe.
+"""
+from .dispatch import (KernelOp, bucket, dispatch, estimate_cost,
+                       get_kernel, register_kernel, registered_kernels)
+
+__all__ = [
+    "KernelOp", "bucket", "dispatch", "estimate_cost",
+    "get_kernel", "register_kernel", "registered_kernels",
+]

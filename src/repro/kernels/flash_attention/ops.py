@@ -1,42 +1,58 @@
-"""Jit'd wrapper: model-layout flash attention on the Pallas kernel.
+"""Model-layout wrapper: flash attention through the shared dispatch.
 
 Takes the model layer's [B, S, Hkv, G, D*] layout, flattens to the
-kernel's [BHG, S, D*] batch-of-heads layout, and dispatches to:
+kernel's [BHG, S, D*] batch-of-heads layout, and routes through the
+``repro.kernels.dispatch`` registry, which resolves the backend:
   - the fused Mosaic kernel on TPU,
   - the Pallas interpreter for correctness tests,
   - the jnp oracle elsewhere.
+Flash shapes are already block-aligned by the model layer, so the
+registration declares no elastic axes — dispatch adds no padding, only
+backend resolution and the bounded jit cache.
+
 The model's default train path stays on the pure-XLA triangular flash
 (models.attention.flash_attention) because this container cannot compile
-Mosaic; on a TPU deployment this wrapper替换s it 1:1 (same signature).
+Mosaic; on a TPU deployment this wrapper replaces it 1:1 (same
+signature).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import KernelOp, dispatch, register_kernel
 from .kernel import flash_attention_fwd_pallas
 from .ref import flash_attention_ref
 
 __all__ = ["flash_attention_fused", "flash_attention_ref"]
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-@functools.partial(jax.jit, static_argnames=("causal", "window",
-                                             "q_chunk", "kv_chunk",
-                                             "backend"))
-def _dispatch(q2, k2, v2, *, causal, window, q_chunk, kv_chunk, backend):
-    if backend == "ref":
-        return flash_attention_ref(q2, k2, v2, causal=causal,
-                                   window=window)
+def _pallas_body(q2, k2, v2, *, causal: bool, window: Optional[int],
+                 q_chunk: int, kv_chunk: int, interpret: bool = False):
     return flash_attention_fwd_pallas(
         q2, k2, v2, causal=causal, window=window, q_chunk=q_chunk,
-        kv_chunk=kv_chunk, interpret=(backend == "interpret"))
+        kv_chunk=kv_chunk, interpret=interpret)
+
+
+def _ref_body(q2, k2, v2, *, causal: bool, window: Optional[int],
+              q_chunk: int, kv_chunk: int):
+    return flash_attention_ref(q2, k2, v2, causal=causal, window=window)
+
+
+register_kernel(KernelOp(
+    name="flash_attention_fwd",
+    pallas_body=_pallas_body,
+    reference_body=_ref_body,
+    # no elastic axes: the model layer block-aligns every shape
+    arg_dims=((), (), ()),
+    pad_values=(0, 0, 0),
+    out_dims=(),
+    bucket_floor=1,
+    cost_hint=lambda q2, k2, v2: float(
+        q2.shape[0] * q2.shape[1] * k2.shape[1]),
+))
 
 
 def flash_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -46,15 +62,14 @@ def flash_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array, *,
                           backend: Optional[str] = None) -> jax.Array:
     """q: [B, Sq, Hkv, G, Dk] (pre-scaled); k/v: [B, Skv, Hkv, D*].
     Returns [B, Sq, Hkv, G, Dv]."""
-    if backend is None:
-        backend = "pallas" if _on_tpu() else "ref"
     b, sq, hkv, g, dk = q.shape
     skv = k.shape[1]
     dv = v.shape[-1]
     q2 = jnp.moveaxis(q, 1, 3).reshape(b * hkv * g, sq, dk)
     k2 = jnp.moveaxis(k, 1, 2).reshape(b * hkv, skv, dk)
     v2 = jnp.moveaxis(v, 1, 2).reshape(b * hkv, skv, dv)
-    out = _dispatch(q2, k2, v2, causal=causal, window=window,
-                    q_chunk=q_chunk, kv_chunk=kv_chunk, backend=backend)
+    out = dispatch("flash_attention_fwd", q2, k2, v2, backend=backend,
+                   causal=causal, window=window, q_chunk=q_chunk,
+                   kv_chunk=kv_chunk)
     out = out.reshape(b, hkv, g, sq, dv)
     return jnp.moveaxis(out, 3, 1)

@@ -1,40 +1,50 @@
-"""Jit'd public wrapper for the Mandelbrot escape-time kernel.
+"""Public wrapper for the Mandelbrot escape-time kernel.
 
-Handles padding to block alignment, backend selection (interpret=True on
-CPU so the kernel body runs under the Pallas interpreter; compiled Mosaic
-path on TPU), and a convenience entry point that takes a rectangle of the
-complex plane instead of precomputed coordinate arrays.
+Backend selection, bucket padding (pad points sit outside the escape
+radius so they cost one iteration) and jit-cache bounding are owned by
+the shared ``repro.kernels.dispatch`` registry; this module is the
+``mandelbrot`` registration plus a convenience entry point that takes a
+rectangle of the complex plane instead of precomputed coordinate
+arrays.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import KernelOp, dispatch, register_kernel
 from .kernel import DEFAULT_BLOCK, mandelbrot_pallas
 from .ref import coords, mandelbrot_ref
 
 __all__ = ["mandelbrot", "mandelbrot_rect", "mandelbrot_ref", "coords"]
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _bucket(n: int, floor: int = 8) -> int:
-    b = floor
-    while b < n:
-        b <<= 1
-    return b
+#: pad constant: outside the escape radius, so padding costs 1 iteration
+_OUTSIDE = 3.0
 
 
-@functools.partial(jax.jit, static_argnames=("max_iter", "block", "backend"))
-def _mandelbrot_padded(c_re, c_im, *, max_iter: int, block, backend: str):
-    if backend == "ref":
-        return mandelbrot_ref(c_re, c_im, max_iter)
-    return mandelbrot_pallas(c_re, c_im, max_iter, block=block,
-                             interpret=(backend == "interpret"))
+def _pallas_body(c_re, c_im, *, max_iter: int, block: tuple = DEFAULT_BLOCK,
+                 interpret: bool = False):
+    # operands arrive bucket-padded; clamp the block statically
+    blk = (min(block[0], c_re.shape[0]), min(block[1], c_re.shape[1]))
+    return mandelbrot_pallas(c_re, c_im, max_iter, block=blk,
+                             interpret=interpret)
+
+
+def _ref_body(c_re, c_im, *, max_iter: int, block: tuple = DEFAULT_BLOCK):
+    return mandelbrot_ref(c_re, c_im, max_iter)
+
+
+register_kernel(KernelOp(
+    name="mandelbrot",
+    pallas_body=_pallas_body,
+    reference_body=_ref_body,
+    # c_re and c_im are [H, W] planes sharing both elastic dims
+    arg_dims=(((0, "h"), (1, "w")), ((0, "h"), (1, "w"))),
+    pad_values=(_OUTSIDE, _OUTSIDE),
+    out_dims=((0, "h"), (1, "w")),
+    bucket_floor=8,
+    cost_hint=lambda c_re, c_im: float(c_re.shape[0] * c_re.shape[1]),
+))
 
 
 def mandelbrot(c_re: jax.Array, c_im: jax.Array, max_iter: int, *,
@@ -42,23 +52,14 @@ def mandelbrot(c_re: jax.Array, c_im: jax.Array, max_iter: int, *,
                backend: str | None = None) -> jax.Array:
     """Dwell map for arbitrary-shaped coordinate arrays (auto-padded).
 
-    backend: "pallas" (compiled Mosaic, TPU), "interpret" (Pallas
-    interpreter, used by kernel tests), "ref" (pure-jnp fast path on CPU),
-    None = auto.  Shapes are bucket-padded to powers of two so repeated
-    irregular rectangle sizes (Mariani-Silver) hit a bounded set of
-    compilations; pad points are outside the escape radius so they cost
-    one iteration.
+    backend: "tpu-pallas" (compiled Mosaic, TPU), "interpret" (Pallas
+    interpreter, used by kernel tests), "ref" (pure-jnp fast path on
+    CPU), None = auto.  Shapes are bucket-padded to powers of two so
+    repeated irregular rectangle sizes (Mariani-Silver) hit a bounded
+    set of compilations.
     """
-    if backend is None:
-        backend = "pallas" if _on_tpu() else "ref"
-    h, w = c_re.shape
-    hb, wb = _bucket(h), _bucket(w)
-    c_re_p = jnp.pad(c_re, ((0, hb - h), (0, wb - w)), constant_values=3.0)
-    c_im_p = jnp.pad(c_im, ((0, hb - h), (0, wb - w)), constant_values=3.0)
-    block = (min(block[0], hb), min(block[1], wb))
-    out = _mandelbrot_padded(c_re_p, c_im_p, max_iter=max_iter,
-                             block=block, backend=backend)
-    return out[:h, :w]
+    return dispatch("mandelbrot", c_re, c_im, backend=backend,
+                    max_iter=max_iter, block=tuple(block))
 
 
 def mandelbrot_rect(x0: float, y0: float, x1: float, y1: float,

@@ -1,9 +1,12 @@
-"""Jit'd public wrapper for the UTS SHA-1 kernel + tree-shape helpers.
+"""Public wrapper for the UTS SHA-1 kernel + tree-shape helpers.
 
-Besides the padded kernel dispatch, this module owns the *semantics* the
-algorithm layer needs from a digest:
+The padded kernel dispatch itself — backend selection, power-of-two
+bucket padding, jit-cache bounding — lives in the shared
+``repro.kernels.dispatch`` registry; this module is the ``uts_hash``
+registration plus the *semantics* the algorithm layer needs from a
+digest:
 
-* ``uts_child_digests``   — kernel (or oracle) dispatch with padding;
+* ``uts_child_digests``   — registered-kernel dispatch;
 * ``random_u31``          — canonical UTS extracts a 31-bit uniform from
                             the first digest word;
 * ``geometric_children``  — number of children: Geometric(mean b0) with a
@@ -17,6 +20,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import KernelOp, dispatch, register_kernel
 from .kernel import DEFAULT_BLOCK_N, uts_hash_pallas
 from .ref import uts_child_digests_ref
 
@@ -26,25 +30,30 @@ __all__ = [
 ]
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _pallas_body(parent, child_ix, *, block_n: int = DEFAULT_BLOCK_N,
+                 interpret: bool = False):
+    # operands arrive bucket-padded, so clamping the block to the padded
+    # lane count is static inside the trace
+    bn = min(block_n, parent.shape[1])
+    return uts_hash_pallas(parent, child_ix.reshape(-1), block_n=bn,
+                           interpret=interpret)
 
 
-def _bucket(n: int, floor: int = 128) -> int:
-    """Next power-of-two >= max(floor, n): bounds jit recompilations when
-    the frontier size changes every generation (irregular by nature)."""
-    b = floor
-    while b < n:
-        b <<= 1
-    return b
+def _ref_body(parent, child_ix, *, block_n: int = DEFAULT_BLOCK_N):
+    return uts_child_digests_ref(parent, child_ix)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "backend"))
-def _hash_padded(parent, child_ix, *, block_n: int, backend: str):
-    if backend == "ref":
-        return uts_child_digests_ref(parent, child_ix)
-    return uts_hash_pallas(parent, child_ix.reshape(-1), block_n=block_n,
-                           interpret=(backend == "interpret"))
+register_kernel(KernelOp(
+    name="uts_hash",
+    pallas_body=_pallas_body,
+    reference_body=_ref_body,
+    # parent [5, N] and child_ix [N] share the elastic lane dim "n"
+    arg_dims=(((1, "n"),), ((0, "n"),)),
+    pad_values=(0, 0),
+    out_dims=((1, "n"),),
+    bucket_floor=128,
+    cost_hint=lambda parent, child_ix: float(parent.shape[1]),
+))
 
 
 def uts_child_digests(parent: jax.Array, child_ix: jax.Array, *,
@@ -52,21 +61,14 @@ def uts_child_digests(parent: jax.Array, child_ix: jax.Array, *,
                       backend: str | None = None) -> jax.Array:
     """SHA1(parent || be32(ix)) for [5, N] parents, [N] indices.
 
-    backend: "pallas" (compiled Mosaic, TPU), "interpret" (Pallas
+    backend: "tpu-pallas" (compiled Mosaic, TPU), "interpret" (Pallas
     interpreter — used by the kernel test sweeps), "ref" (pure-jnp oracle
     — the fast path on CPU, bit-identical by test), or None = auto.
     """
-    if backend is None:
-        backend = "pallas" if _on_tpu() else "ref"
-    n = parent.shape[1]
-    if n == 0:
+    if parent.shape[1] == 0:
         return jnp.zeros((5, 0), jnp.uint32)
-    nb = _bucket(n)
-    parent_p = jnp.pad(parent, ((0, 0), (0, nb - n)))
-    child_p = jnp.pad(child_ix, (0, nb - n))
-    bn = min(block_n, nb)
-    out = _hash_padded(parent_p, child_p, block_n=bn, backend=backend)
-    return out[:, :n]
+    return dispatch("uts_hash", parent, child_ix, backend=backend,
+                    block_n=block_n)
 
 
 def root_digest(seed: int) -> jax.Array:

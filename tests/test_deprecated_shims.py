@@ -1,0 +1,46 @@
+"""The PR-1 deprecated entry points (`uts_parallel`, `mariani_silver`,
+`betweenness_centrality`): still correct, and loudly deprecated."""
+import numpy as np
+import pytest
+
+from repro.algorithms import (MSParams, RMATParams, UTSParams,
+                              bc_single_node, betweenness_centrality,
+                              mariani_silver, naive_render, rmat_graph,
+                              uts_parallel, uts_sequential)
+from repro.core import TaskShape, make_pool
+
+
+def test_uts_parallel_shim_warns_and_matches_sequential():
+    p = UTSParams(seed=19, b0=4.0, max_depth=6, chunk=1024)
+    expected = uts_sequential(p)
+    with make_pool("local", max_concurrency=3,
+                   invoke_overhead=0.0) as ex:
+        with pytest.warns(DeprecationWarning, match="uts_parallel"):
+            res = uts_parallel(ex, p, shape=TaskShape(8, 500))
+    assert res.count == expected
+    assert res.tasks >= 1
+
+
+def test_mariani_silver_shim_warns_and_matches_oracle():
+    p = MSParams(width=48, height=48, max_dwell=32,
+                 initial_subdivision=2, max_depth=3)
+    oracle = naive_render(p)
+    with make_pool("local", max_concurrency=2,
+                   invoke_overhead=0.0) as ex:
+        with pytest.warns(DeprecationWarning, match="mariani_silver"):
+            res = mariani_silver(ex, p)
+    assert np.array_equal(res.image, oracle)
+    assert res.filled_pixels + res.evaluated_pixels == 48 * 48
+
+
+def test_betweenness_shim_warns_and_matches_single_node():
+    p = RMATParams(scale=5, seed=2)
+    expected = bc_single_node(rmat_graph(p), n_tasks=1)
+    with make_pool("local", max_concurrency=2,
+                   invoke_overhead=0.0) as ex:
+        with pytest.warns(DeprecationWarning,
+                          match="betweenness_centrality"):
+            res = betweenness_centrality(ex, p, n_tasks=4)
+    np.testing.assert_allclose(res.betweenness, expected,
+                               rtol=1e-4, atol=1e-3)
+    assert res.tasks == 4

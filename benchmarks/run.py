@@ -24,10 +24,10 @@ from repro.algorithms import (MSParams, RMATParams, UTSParams,
                               bc_single_node, bc_spec, ms_spec,
                               naive_render, rmat_graph, uts_sequential,
                               uts_spec)
-from repro.core import (StagedController, TaskShape, VMPrice,
-                        characterize, emr_cluster_cost, make_pool,
-                        price_performance, run_irregular,
-                        serverless_cost, vm_cost)
+from repro.core import (AutoscalePolicy, ProviderModel, StagedController,
+                        TaskShape, VMPrice, characterize,
+                        emr_cluster_cost, make_pool, price_performance,
+                        run_irregular, serverless_cost, vm_cost)
 from repro.core.adaptive import Stage as CtrlStage
 from repro.configs.paper_workloads import (BC_SCALED, BC_SCALED_TASKS,
                                            MS_SCALED, UTS_SCALED)
@@ -347,6 +347,89 @@ def fig7_9_cost_performance() -> None:
                                          cost_emr), 0))
 
 
+# -- Cost-performance at paper scale (2000 workers, provider dynamics) -----------
+
+def cost_performance_sim() -> None:
+    """Paper §4.3 ordering at true scale: elastic serverless UTS vs a
+    static VM on price-performance (Eq. 7), under the virtual-time pool
+    with the full provider model — 2 000 workers, 13 ms warm overhead,
+    cold starts enabled, frontier-driven autoscale.  ``alpha``
+    calibrates the laptop-size tree to paper-scale work (each node
+    models ~4 ms of traversal), so task bodies dwarf invocation
+    overhead exactly as the paper's §5.2 tuning ensures."""
+    p = UTSParams(seed=19, b0=4.0, max_depth=10, chunk=4096)
+    alpha = 4e-3
+    dur = (lambda task, result: alpha * result[0])
+    shape = TaskShape(100, 400)
+
+    # elastic serverless: cold starts on, capacity follows the frontier
+    with make_pool("sim", max_concurrency=2000,
+                   provider=ProviderModel.aws_lambda(),
+                   duration_fn=dur) as pool:
+        r_sls = run_irregular(pool, uts_spec(p), shape=shape,
+                              autoscale=AutoscalePolicy(min_capacity=8,
+                                                        max_capacity=2000))
+    # static VM: c5.24xlarge (96 vCPU), billed for the whole makespan
+    with make_pool("sim", max_concurrency=96,
+                   provider=ProviderModel.local_vm(),
+                   duration_fn=dur) as pool:
+        r_vm = run_irregular(pool, uts_spec(p), shape=shape)
+    assert r_sls.output == r_vm.output
+    nodes = r_sls.output
+    cost_vm = vm_cost(r_vm.makespan_s, VMPrice.named("c5.24xlarge"))
+    cost_emr = emr_cluster_cost(r_vm.makespan_s, workers=1)
+    ppr_sls = price_performance(nodes / r_sls.makespan_s / 1e6, r_sls.cost)
+    ppr_vm = price_performance(nodes / r_vm.makespan_s / 1e6, cost_vm)
+    ppr_emr = price_performance(nodes / r_vm.makespan_s / 1e6, cost_emr)
+    emit("cost_performance_sim", r_sls.makespan_s * 1e6,
+         nodes=nodes,
+         serverless_vt_s=round(r_sls.makespan_s, 3),
+         vm_vt_s=round(r_vm.makespan_s, 3),
+         serverless_usd=round(r_sls.cost.total, 6),
+         vm_usd=round(cost_vm.total, 6),
+         serverless_peak=r_sls.peak_concurrency,
+         serverless_cold_starts=r_sls.cold_starts,
+         autoscale_resizes=len(r_sls.autoscale_decisions),
+         ppr_serverless=round(ppr_sls, 3),
+         ppr_vm=round(ppr_vm, 3),
+         ppr_emr=round(ppr_emr, 3),
+         serverless_beats_vm=ppr_sls > ppr_vm,
+         equal_cost_speedup=round(ppr_sls / ppr_vm, 2))
+
+
+def cold_warm_ablation() -> None:
+    """Cold-start tax from actual runs: the same UTS drive under the
+    same provider model with provisioning latency on (500 ms cold
+    start, containers reused within the keep-alive window) vs the
+    paper's prewarmed-container assumption.  Both makespan and invoice
+    come live from the run's event timeline."""
+    p = UTSParams(seed=19, b0=4.0, max_depth=9, chunk=4096)
+    alpha = 16e-3
+    dur = (lambda task, result: alpha * result[0])
+    shape = TaskShape(50, 100)
+    runs = {}
+    for label, prov in (
+            ("cold", ProviderModel.aws_lambda(cold_start_s=0.5)),
+            ("warm", ProviderModel.prewarmed())):
+        with make_pool("sim", max_concurrency=2000, provider=prov,
+                       duration_fn=dur) as pool:
+            runs[label] = run_irregular(pool, uts_spec(p), shape=shape)
+    cold, warm = runs["cold"], runs["warm"]
+    assert cold.output == warm.output
+    emit("cold_warm_ablation", cold.makespan_s * 1e6,
+         nodes=cold.output, tasks=cold.tasks,
+         cold_vt_s=round(cold.makespan_s, 3),
+         warm_vt_s=round(warm.makespan_s, 3),
+         cold_penalty_pct=round(
+             100 * (cold.makespan_s / warm.makespan_s - 1), 1),
+         cold_usd=round(cold.cost.total, 6),
+         warm_usd=round(warm.cost.total, 6),
+         cost_penalty_pct=round(
+             100 * (cold.cost.total / warm.cost.total - 1), 1),
+         containers_provisioned=cold.cold_starts,
+         penalty_measurable=cold.makespan_s > warm.makespan_s)
+
+
 # -- Batch fusion: run_irregular with vs without execute_batch -------------------
 
 def fig_batch_fusion() -> None:
@@ -430,6 +513,8 @@ BENCHES = {
     "fig5_table6": fig5_table6_mariani_silver,
     "fig6": fig6_bc_scaling,
     "fig7_9": fig7_9_cost_performance,
+    "cost_perf_sim": cost_performance_sim,
+    "cold_warm": cold_warm_ablation,
     "fig_batch_fusion": fig_batch_fusion,
     "roofline": roofline_from_dryrun,
 }

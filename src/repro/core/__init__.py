@@ -5,6 +5,12 @@ Unified public API (one pool abstraction, one master loop):
     WorkSpec, run_irregular(pool, spec, ...), IrregularResult
     as_completed, CompletionQueue            (event-driven completions)
 
+Elasticity and telemetry:
+    ProviderModel (cold/warm containers, scaling ramp, billing),
+    AutoscalePolicy, ContainerFleet, pool.resize(capacity)
+    Clock, WallClock, VirtualClock, Event, EventLog  (one timeline:
+    submit/cold_start/start/requeue/complete/capacity_grow/-shrink)
+
 Backends and primitives:
     LocalExecutor, ElasticExecutor, HybridExecutor, SimPool
     ElasticFuture, Task, TaskRecord, ExecutorStats, ConcurrencyTracker
@@ -14,6 +20,8 @@ Backends and primitives:
 """
 from .futures import (CompletionQueue, ElasticFuture, Task, TaskRecord,
                       TaskState)
+from .telemetry import (Clock, Event, EventLog, VirtualClock, WallClock)
+from .provider import AutoscalePolicy, ContainerFleet, ProviderModel
 from .pool import Pool, make_pool, register_pool, registered_pools
 from .executor import (
     BaseExecutor,
@@ -50,6 +58,8 @@ from .characterization import (
 __all__ = [
     "Pool", "make_pool", "register_pool", "registered_pools",
     "WorkSpec", "run_irregular", "IrregularResult",
+    "ProviderModel", "AutoscalePolicy", "ContainerFleet",
+    "Clock", "WallClock", "VirtualClock", "Event", "EventLog",
     "ElasticFuture", "Task", "TaskRecord", "TaskState", "CompletionQueue",
     "BaseExecutor", "ElasticExecutor", "LocalExecutor", "HybridExecutor",
     "SimPool", "simulate_uts_pool",

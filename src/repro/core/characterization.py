@@ -1,6 +1,8 @@
 """Algorithm characterization (paper §4.2, Table 2, Figs. 2-3).
 
-Three lenses on a completed run's ``TaskRecord`` log:
+Three lenses on a completed run's execution timeline — pass a pool's
+:class:`~repro.core.telemetry.EventLog` (``pool.events``) directly, or
+a raw ``TaskRecord`` iterable:
 
 * **Coefficient of variation** C_L = sigma_L / mu_L over task durations —
   the paper's imbalance metric (UTS 1.20, Mariani-Silver 4.06, BC 0.23).
@@ -18,9 +20,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Iterable, List, Sequence, Tuple
+from typing import Iterable, List, Sequence, Tuple, Union
 
 from .futures import TaskRecord
+from .telemetry import EventLog
 
 __all__ = [
     "coefficient_of_variation", "task_generation_rate", "duration_cdf",
@@ -97,8 +100,11 @@ def _quantile(xs: List[float], q: float) -> float:
     return xs[idx]
 
 
-def characterize(records: Iterable[TaskRecord],
+def characterize(records: Union[EventLog, Iterable[TaskRecord]],
                  bucket_s: float = 1.0) -> Characterization:
+    """Characterize a run from its timeline (or raw records)."""
+    if isinstance(records, EventLog):
+        records = records.records
     recs = list(records)
     durations = sorted(r.duration for r in recs)
     submits = [r.submit_time for r in recs]

@@ -11,13 +11,24 @@ The same accounting generalizes to TPU device-seconds (``TPUPrice``): a
 pod slice billed per chip-hour is the "VM", an elastic slice acquired per
 task is the "function".  This is what makes the paper's cost-performance
 methodology portable to the pod framework.
+
+Billing reads the unified execution timeline: pass a pool's
+:class:`~repro.core.telemetry.EventLog` (``pool.events``) straight to
+:func:`serverless_cost` — completion records, attempt counts, and cold
+starts all come from the same event history the run produced (a plain
+``TaskRecord`` iterable is still accepted).  A
+:class:`~repro.core.provider.ProviderModel` supplies the billing
+granularity and container memory, so real and simulated runs under the
+same model are invoiced identically.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, Optional
+from typing import Iterable, Optional, Union
 
 from .futures import TaskRecord
+from .provider import ProviderModel
+from .telemetry import EventLog
 
 __all__ = [
     "LambdaPrice", "VMPrice", "TPUPrice", "CostReport",
@@ -84,18 +95,31 @@ class CostReport:
 
 
 def serverless_cost(
-    records: Iterable[TaskRecord],
+    records: Union[EventLog, Iterable[TaskRecord]],
     *,
     wall_time_s: float,
-    price: LambdaPrice = LambdaPrice(),
+    price: Optional[LambdaPrice] = None,
     client_vm: Optional[VMPrice] = None,
-    billing_granularity_s: float = 0.001,  # Lambda bills per ms
+    billing_granularity_s: Optional[float] = None,
+    provider: Optional[ProviderModel] = None,
 ) -> CostReport:
-    """Eq. 3-6 over an executor's completion records.
+    """Eq. 3-6 over an execution timeline (or raw completion records).
 
     Only *remote* records are billed as invocations/execution; the client
     VM is billed for the whole wall time (the master runs throughout).
+    Every attempt — retries, cold starts, speculated duplicates — is a
+    separate invoice line, exactly as the platform would bill it.  A
+    ``provider`` model supplies the billing granularity and container
+    memory unless explicitly overridden.
     """
+    if isinstance(records, EventLog):
+        records = records.records
+    if price is None:
+        price = (LambdaPrice(memory_mb=provider.memory_mb)
+                 if provider is not None else LambdaPrice())
+    if billing_granularity_s is None:
+        billing_granularity_s = (provider.billing_granularity_s
+                                 if provider is not None else 0.001)
     remote = [r for r in records if r.remote]
     n = sum(r.attempts for r in remote)  # every attempt is an invocation
     gb = price.memory_mb / 1024.0

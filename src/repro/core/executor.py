@@ -14,9 +14,24 @@ model.  We reproduce that abstraction for a TPU/JAX framework:
                             ``thread`` (real host threads; on a pod each
                             worker owns a mesh slice).
 
-Every completion is appended to a ``TaskRecord`` log consumed by
-``characterization.py`` (C_L, task-rate, CDF — paper §4.2) and
-``costmodel.py`` (Eq. 3-7).
+Every pool writes one :class:`~repro.core.telemetry.EventLog` timeline
+(``pool.events``): submit / cold_start / start / requeue / complete /
+capacity_grow / capacity_shrink.  ``characterization.py`` (C_L,
+task-rate, CDF — paper §4.2) and ``costmodel.py`` (Eq. 3-7) read that
+timeline; ``ExecutorStats`` is the running-counter view over it.
+
+Platform dynamics are data, not code: pass a
+:class:`~repro.core.provider.ProviderModel` and the executor models
+cold starts vs. warm-container reuse (keep-alive window, LIFO reuse),
+admission beyond the burst waits on the provider's per-minute scaling
+ramp, and the rate limit comes from the model.  The *same* model drives
+the virtual-time ``SimPool``, so real and simulated runs are billed and
+characterized identically.
+
+Pools are resizable: ``resize(capacity)`` grows the worker set
+immediately and shrinks it gracefully (retire sentinels behind queued
+work), logging ``capacity_grow`` / ``capacity_shrink`` events — the
+mechanism under ``run_irregular``'s ``AutoscalePolicy`` hook.
 
 Semantics intentionally mirrored from the paper:
   * tasks are stateless ⇒ re-execution is safe (used for straggler
@@ -39,6 +54,9 @@ from typing import Any, Callable, Iterable, Iterator, List, Optional
 from .futures import (CompletionQueue, ElasticFuture, Task, TaskRecord,
                       TaskState)
 from .pool import Pool, register_pool
+from .provider import ContainerFleet, ProviderModel
+from .telemetry import (CAPACITY_GROW, CAPACITY_SHRINK, COLD_START,
+                        COMPLETE, REQUEUE, START, SUBMIT, Clock, EventLog)
 
 __all__ = [
     "ConcurrencyTracker",
@@ -61,9 +79,9 @@ class ConcurrencyTracker:
     """Shared active/peak counter several stats objects can notify.
 
     ``HybridExecutor`` attaches one tracker to both its sub-pools'
-    stats, yielding the *true* combined peak concurrency (the old
-    per-pool-peak sum was only an upper bound — pools rarely peak at
-    the same instant)."""
+    stats, yielding the *true* combined peak concurrency as a cheap
+    running counter (the full combined curve lives in the merged
+    event timeline, ``HybridExecutor.events``)."""
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
@@ -81,14 +99,22 @@ class ConcurrencyTracker:
 
 
 class ExecutorStats:
-    """Thread-safe running statistics of an executor pool.
+    """Running-counter view over a pool's :class:`EventLog` timeline.
+
+    Every mutation both bumps the thread-safe counters (cheap O(1)
+    reads for schedulers: ``active``, ``peak_concurrency``) and appends
+    the corresponding typed event to :attr:`log` — the single artifact
+    characterization and cost accounting consume.  ``records`` is
+    derived from the timeline's ``complete`` events.
 
     ``failed`` counts *terminal* failures only; transient attempts that
     are requeued for retry show up in ``retries`` (and as extra
     billable ``invocations``), never in ``failed``."""
 
-    def __init__(self) -> None:
+    def __init__(self, clock: Optional[Clock] = None,
+                 log: Optional[EventLog] = None) -> None:
         self._lock = threading.Lock()
+        self.log = log if log is not None else EventLog(clock)
         self.submitted = 0
         self.completed = 0
         self.failed = 0
@@ -96,23 +122,32 @@ class ExecutorStats:
         self.active = 0
         self.peak_concurrency = 0
         self.invocations = 0  # billable invocations (includes retries)
-        self.records: List[TaskRecord] = []
-        self.concurrency_trace: List[tuple] = []  # (t, active) samples
+        self.cold_starts = 0
         self.trackers: List[ConcurrencyTracker] = []
 
-    def _sample(self) -> None:
-        self.concurrency_trace.append((time.monotonic(), self.active))
+    @property
+    def records(self) -> List[TaskRecord]:
+        """Completion log, derived from the timeline."""
+        return self.log.records
 
-    def on_submit(self) -> None:
+    def on_submit(self, task_id: Optional[int] = None) -> None:
         with self._lock:
             self.submitted += 1
+        self.log.emit(SUBMIT, task_id=task_id)
 
-    def on_start(self) -> None:
+    def on_cold_start(self, task_id: Optional[int] = None,
+                      worker: Optional[str] = None) -> None:
+        with self._lock:
+            self.cold_starts += 1
+        self.log.emit(COLD_START, task_id=task_id, worker=worker)
+
+    def on_start(self, task_id: Optional[int] = None,
+                 worker: Optional[str] = None) -> None:
         with self._lock:
             self.active += 1
             self.invocations += 1
             self.peak_concurrency = max(self.peak_concurrency, self.active)
-            self._sample()
+        self.log.emit(START, task_id=task_id, worker=worker)
         for t in self.trackers:
             t.task_started()
 
@@ -123,25 +158,31 @@ class ExecutorStats:
                 self.completed += 1
             else:
                 self.failed += 1
-            if record is not None:
-                self.records.append(record)
-            self._sample()
+        self.log.emit(
+            COMPLETE, ok=ok, record=record,
+            task_id=record.task_id if record is not None else None,
+            worker=record.worker if record is not None else None)
         for t in self.trackers:
             t.task_finished()
 
-    def on_requeue(self) -> None:
+    def on_requeue(self, task_id: Optional[int] = None,
+                   worker: Optional[str] = None) -> None:
         """A transient attempt ended and the task went back on the
         queue: the slot frees up but neither ``completed`` nor
         ``failed`` moves (the retry-path double count of old)."""
         with self._lock:
             self.active -= 1
-            self._sample()
+        self.log.emit(REQUEUE, task_id=task_id, worker=worker)
         for t in self.trackers:
             t.task_finished()
 
     def on_retry(self) -> None:
         with self._lock:
             self.retries += 1
+
+    def on_resize(self, old: int, new: int) -> None:
+        self.log.emit(CAPACITY_GROW if new > old else CAPACITY_SHRINK,
+                      capacity=new)
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -153,7 +194,12 @@ class ExecutorStats:
                 "active": self.active,
                 "peak_concurrency": self.peak_concurrency,
                 "invocations": self.invocations,
+                "cold_starts": self.cold_starts,
             }
+
+
+#: worker-loop sentinel: retire exactly one worker thread (resize down)
+_RETIRE = object()
 
 
 class BaseExecutor(Pool):
@@ -168,6 +214,7 @@ class BaseExecutor(Pool):
         self,
         max_concurrency: int,
         *,
+        provider: Optional[ProviderModel] = None,
         invoke_overhead: float = 0.0,
         invoke_rate_limit: Optional[float] = None,
         throttle_mode: str = "queue",  # "queue" | "reject"
@@ -179,6 +226,10 @@ class BaseExecutor(Pool):
         if max_concurrency <= 0:
             raise ValueError("max_concurrency must be positive")
         self.max_concurrency = max_concurrency
+        self.provider = provider
+        if provider is not None:
+            invoke_overhead = provider.warm_overhead_s
+            invoke_rate_limit = provider.invoke_rate_limit
         self.invoke_overhead = invoke_overhead
         self.invoke_rate_limit = invoke_rate_limit
         self.throttle_mode = throttle_mode
@@ -186,6 +237,10 @@ class BaseExecutor(Pool):
         self.max_attempts = max_attempts
         self.name = name or f"{self.kind}-pool"
         self.stats = ExecutorStats()
+        self._fleet = (ContainerFleet(provider)
+                       if provider is not None else None)
+        self._admit_lock = threading.Lock()
+        self._ramp_t0: Optional[float] = None
         self._queue: "queue.Queue" = queue.Queue()
         self._shutdown = False
         self._rng_state = seed or 0x9E3779B9
@@ -194,21 +249,28 @@ class BaseExecutor(Pool):
         self._workers: List[threading.Thread] = []
         self._workers_lock = threading.Lock()
         self._started = False
+        self._worker_seq = 0
+        # announce the initial capacity on the timeline
+        self.stats.on_resize(0, max_concurrency)
 
     # -- worker management ------------------------------------------------
+    def _spawn_worker(self) -> None:
+        t = threading.Thread(
+            target=self._worker_loop,
+            args=(f"{self.name}-w{self._worker_seq}",),
+            daemon=True,
+        )
+        self._worker_seq += 1
+        t.start()
+        self._workers.append(t)
+
     def _ensure_workers(self) -> None:
         with self._workers_lock:
             if self._started:
                 return
             self._started = True
-            for i in range(self.max_concurrency):
-                t = threading.Thread(
-                    target=self._worker_loop,
-                    args=(f"{self.name}-w{i}",),
-                    daemon=True,
-                )
-                t.start()
-                self._workers.append(t)
+            for _ in range(self.max_concurrency):
+                self._spawn_worker()
 
     def _worker_loop(self, worker_name: str) -> None:
         while True:
@@ -216,11 +278,38 @@ class BaseExecutor(Pool):
             if item is None:  # shutdown sentinel
                 self._queue.task_done()
                 return
+            if item is _RETIRE:  # resize-down sentinel
+                self._queue.task_done()
+                return
             task, future = item
             try:
                 self._run_one(task, future, worker_name)
             finally:
                 self._queue.task_done()
+
+    def resize(self, capacity: int) -> None:
+        """Set the pool's worker capacity.
+
+        Growing spawns workers immediately; shrinking retires workers
+        gracefully (a retire sentinel queued behind current work — no
+        running task is interrupted).  Logged as a ``capacity_grow`` /
+        ``capacity_shrink`` timeline event either way."""
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        with self._workers_lock:
+            old = self.max_concurrency
+            if capacity == old:
+                return
+            self.max_concurrency = capacity
+            self.stats.on_resize(old, capacity)
+            if not self._started:
+                return  # workers spawn lazily at the new width
+            if capacity > old:
+                for _ in range(capacity - old):
+                    self._spawn_worker()
+            else:
+                for _ in range(old - capacity):
+                    self._queue.put(_RETIRE)
 
     def _next_rand(self) -> float:
         # xorshift — deterministic failure injection without global RNG.
@@ -243,37 +332,73 @@ class BaseExecutor(Pool):
         if wait > 0:
             time.sleep(wait)
 
+    def _admit(self, task: Task, worker: str):
+        """Reserve an execution slot: rate limit, provider scaling
+        ramp, then cold/warm container acquisition.  Returns
+        ``(container_id, cold)`` — ``(None, False)`` without a provider
+        model.  The admission lock serializes the allowed-concurrency
+        check with the ``active`` bump, so the ramp is never
+        overshot."""
+        self._respect_rate_limit()
+        if self.provider is None:
+            self.stats.on_start(task.task_id, worker)
+            return None, False
+        with self._admit_lock:
+            now = time.monotonic()
+            if self._ramp_t0 is None:
+                self._ramp_t0 = now
+            while not self._shutdown:
+                allowed = min(
+                    self.max_concurrency,
+                    self.provider.allowed_concurrency(
+                        time.monotonic() - self._ramp_t0))
+                if self.stats.active < allowed:
+                    break
+                time.sleep(1e-4)
+            cid, cold = self._fleet.acquire(time.monotonic())
+            if cold:
+                self.stats.on_cold_start(task.task_id, worker)
+            self.stats.on_start(task.task_id, worker)
+        return cid, cold
+
     def _run_one(self, task: Task, future: ElasticFuture, worker: str) -> None:
         if future.state is TaskState.CANCELLED:
             return  # never started: no invocation, no failure
-        self._respect_rate_limit()
-        self.stats.on_start()
+        cid, cold = self._admit(task, worker)
         future._set_running()
         task.start_time = time.monotonic()
         task.worker = worker
         task.attempts += 1
-        if self.invoke_overhead > 0:
-            time.sleep(self.invoke_overhead)
+        overhead = (self.provider.overhead_s(cold) if self.provider
+                    else self.invoke_overhead)
+        if overhead > 0:
+            time.sleep(overhead)
         try:
             if self.failure_rate > 0 and self._next_rand() < self.failure_rate:
                 raise RuntimeError(f"injected worker failure on {worker}")
             result = task.run()
         except BaseException as exc:  # noqa: BLE001 — report any failure
             task.end_time = time.monotonic()
+            self._release(cid)
             if task.attempts < self.max_attempts:
                 # stateless ⇒ safe to re-invoke (paper §3.3); transient,
                 # so it counts as a retry, not a failure
                 self.stats.on_retry()
-                self.stats.on_requeue()
+                self.stats.on_requeue(task.task_id, worker)
                 self._queue.put((task, future))
                 return
             self.stats.on_finish(self._record(task, worker), ok=False)
             future._set_exception(exc)
             return
         task.end_time = time.monotonic()
+        self._release(cid)
         record = self._record(task, worker)
         self.stats.on_finish(record, ok=True)
         future._set_result(result)
+
+    def _release(self, cid: Optional[int]) -> None:
+        if self._fleet is not None and cid is not None:
+            self._fleet.release(cid, time.monotonic())
 
     def _record(self, task: Task, worker: str) -> TaskRecord:
         return TaskRecord(
@@ -301,7 +426,7 @@ class BaseExecutor(Pool):
         self._ensure_workers()
         task = Task(fn=fn, args=args, kwargs=kwargs, cost_hint=cost_hint)
         future = ElasticFuture(task)
-        self.stats.on_submit()
+        self.stats.on_submit(task.task_id)
         self._queue.put((task, future))
         return future
 
@@ -343,7 +468,11 @@ class ElasticExecutor(BaseExecutor):
 
     Defaults model AWS Lambda as measured in the paper (Table 4):
     ~13 ms invocation overhead, 1 000 default concurrency (2 000 in the
-    paper's region), 10 000 invocations/s rate limit.
+    paper's region), 10 000 invocations/s rate limit.  Pass
+    ``provider=ProviderModel.aws_lambda()`` (or any other model) to
+    additionally simulate cold starts vs. warm-container reuse and the
+    per-minute concurrency scaling ramp; overhead and rate limits then
+    come from the model.
     """
 
     kind = "elastic"
@@ -353,12 +482,14 @@ class ElasticExecutor(BaseExecutor):
         self,
         max_concurrency: int = 1000,
         *,
+        provider: Optional[ProviderModel] = None,
         invoke_overhead: float = 13e-3,
         invoke_rate_limit: Optional[float] = 10_000.0,
         **kw: Any,
     ) -> None:
         super().__init__(
             max_concurrency,
+            provider=provider,
             invoke_overhead=invoke_overhead,
             invoke_rate_limit=invoke_rate_limit,
             **kw,

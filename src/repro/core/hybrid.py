@@ -11,8 +11,14 @@ Transparency: callers submit to the HybridExecutor exactly as to any other
 executor; placement is invisible (Coulouris's *scaling transparency*).
 Satisfies the unified ``Pool`` contract (``make_pool("hybrid", ...)``);
 both sub-pools notify one shared ``ConcurrencyTracker``, so the combined
-``peak_concurrency`` is the true simultaneous maximum rather than the
-old sum of independent per-pool peaks.
+``peak_concurrency`` is the true simultaneous maximum, and ``events``
+exposes a merged view of the two sub-pools' timelines — one combined
+event history for characterization and cost accounting.
+
+Elasticity follows the paper's asymmetry: the local donor VM is fixed
+hardware, so ``resize`` adjusts only the elastic (serverless) side —
+total capacity is ``local + elastic`` and the spill pool absorbs every
+grow/shrink decision.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ from .executor import (BaseExecutor, ConcurrencyTracker, ElasticExecutor,
                        LocalExecutor)
 from .futures import ElasticFuture
 from .pool import Pool, register_pool
+from .telemetry import CAPACITY_GROW, CAPACITY_SHRINK, EventLog
 
 __all__ = ["HybridExecutor"]
 
@@ -55,6 +62,11 @@ class HybridExecutor(Pool):
                                 + self.elastic.stats.active)
         self.local.stats.trackers.append(self._tracker)
         self.elastic.stats.trackers.append(self._tracker)
+        # aggregate capacity announcements live on the hybrid's own log
+        # (sub-pool events carry sub-pool capacities); merged after the
+        # sub-logs so the combined capacity is the series' last word
+        self._log = EventLog()
+        self._log.emit(CAPACITY_GROW, capacity=self.capacity)
 
     # -- the paper's submit(), lines 7-27 of Listing 1 ---------------------
     def submit(self, fn: Callable[..., Any], *args: Any,
@@ -73,6 +85,32 @@ class HybridExecutor(Pool):
     def stats(self) -> "_CombinedStats":
         return _CombinedStats(self.local.stats, self.elastic.stats,
                               self._tracker)
+
+    @property
+    def events(self) -> EventLog:
+        """Merged timeline over the local + elastic sub-pools — the
+        true combined concurrency/cost history.  Sub-pool capacity
+        events are dropped (they carry sub-pool widths); the hybrid's
+        own aggregate announcements stand in for them, keeping
+        ``capacity_series()`` in one unit."""
+        merged = EventLog.merged(
+            [self.local.stats.log, self.elastic.stats.log],
+            exclude_kinds=(CAPACITY_GROW, CAPACITY_SHRINK))
+        return EventLog.merged([merged, self._log])
+
+    @property
+    def capacity(self) -> int:
+        return self.local.max_concurrency + self.elastic.max_concurrency
+
+    def resize(self, capacity: int) -> None:
+        """Resize total capacity; the local donor VM is fixed hardware,
+        so the elastic side absorbs the whole delta (floor 1)."""
+        old = self.capacity
+        self.elastic.resize(max(1, capacity - self.local.max_concurrency))
+        new = self.capacity
+        if new != old:
+            self._log.emit(CAPACITY_GROW if new > old else CAPACITY_SHRINK,
+                           capacity=new)
 
     def placement_counts(self) -> dict:
         return {
@@ -123,6 +161,10 @@ class _CombinedStats:
         return self._a.invocations + self._b.invocations
 
     @property
+    def cold_starts(self):
+        return self._a.cold_starts + self._b.cold_starts
+
+    @property
     def peak_concurrency(self):
         if self._tracker is not None:
             # true combined peak via the shared notification layer
@@ -139,5 +181,6 @@ class _CombinedStats:
             "failed": self.failed, "retries": self.retries,
             "active": self.active,
             "invocations": self.invocations,
+            "cold_starts": self.cold_starts,
             "peak_concurrency": self.peak_concurrency,
         }

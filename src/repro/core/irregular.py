@@ -29,8 +29,10 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional
 
 from .adaptive import TaskShape
+from .costmodel import CostReport, serverless_cost
 from .futures import CompletionQueue, ElasticFuture, TaskState
 from .pool import Pool
+from .provider import AutoscalePolicy
 
 __all__ = ["WorkSpec", "IrregularResult", "run_irregular"]
 
@@ -81,7 +83,14 @@ class WorkSpec:
 
 @dataclass
 class IrregularResult:
-    """Outcome of one ``run_irregular`` drive."""
+    """Outcome of one ``run_irregular`` drive.
+
+    ``cost`` and the two time series are computed live from the pool's
+    event timeline (``pool.events``) — billing and the Fig.-4-style
+    concurrency curve come out of the same run that produced the
+    output, not a post-hoc reconstruction.  On virtual-time pools the
+    series timestamps and the billed makespan are virtual.
+    """
 
     output: Any
     wall_time_s: float
@@ -90,13 +99,26 @@ class IrregularResult:
     controller_transitions: list = field(default_factory=list)
     speculated: int = 0             # straggler duplicates issued
     pool_snapshot: Dict[str, Any] = field(default_factory=dict)
+    #: makespan used for billing: virtual time on sim pools, else wall
+    makespan_s: float = 0.0
+    #: Eq. 3-6 over the pool's timeline (client VM billed for makespan)
+    cost: Optional[CostReport] = None
+    #: (t, active) concurrency-over-time curve from the timeline
+    concurrency_series: List[tuple] = field(default_factory=list)
+    #: (t, capacity) resize history (autoscale + explicit resizes)
+    capacity_series: List[tuple] = field(default_factory=list)
+    #: container provisions observed during the run (provider models)
+    cold_starts: int = 0
+    #: (old, new) capacity decisions the autoscale policy issued
+    autoscale_decisions: List[tuple] = field(default_factory=list)
 
     @property
     def throughput(self) -> float:
         """Output units per second when ``output`` is a count."""
-        if not self.wall_time_s or not isinstance(self.output, (int, float)):
+        t = self.makespan_s or self.wall_time_s
+        if not t or not isinstance(self.output, (int, float)):
             return 0.0
-        return self.output / self.wall_time_s
+        return self.output / t
 
 
 @dataclass
@@ -114,6 +136,7 @@ def run_irregular(
     shape: Optional[TaskShape] = None,
     initial_shape: Optional[TaskShape] = None,
     controller: Optional[Any] = None,
+    autoscale: Optional[AutoscalePolicy] = None,
     speculative_deadline: Optional[float] = None,
     timeout: Optional[float] = None,
     batching: Optional[bool] = None,
@@ -126,6 +149,13 @@ def run_irregular(
     controller            object with ``update(active) -> TaskShape``
                           (``StagedController`` / ``OccupancyController``);
                           called once per completion, like Listing 5
+    autoscale             ``AutoscalePolicy`` consulted once per
+                          completion: capacity follows the frontier up
+                          (queued tasks are demand) and shrinks in the
+                          drain phase, applied via ``pool.resize`` and
+                          clamped to the provider's scaling ramp when
+                          the pool carries a ``ProviderModel`` — the
+                          paper's inherent elasticity, made explicit
     speculative_deadline  clone a task that has been *running* longer
                           than this many real seconds onto another
                           worker; first settlement wins, the loser is
@@ -205,11 +235,38 @@ def run_irregular(
                 cq.add(f)
                 n_dispatched += 1
 
+    # per-run windows (captured before the seed dispatch lands): a
+    # long-lived pool's log (and a sim pool's clock) may carry earlier
+    # runs — composite pools rebuild their merged log per access, so
+    # re-fetch pool.events at each use
+    has_events = getattr(pool, "events", None) is not None
+    events_start = len(pool.events) if has_events else 0
+    vt0 = getattr(pool, "virtual_time_s", None) or 0.0
+    ramp_t0: List[float] = []  # first-event timestamp, cached once
+
     dispatch_ready(list(spec.seed(initial_shape or shape)),
                    initial_shape or shape)
 
     deadline = None if timeout is None else t0 + timeout
     speculated = 0
+
+    def apply_autoscale() -> None:
+        """Frontier-pressure grow / idle shrink, honoring the ramp."""
+        cap = pool.capacity
+        target = autoscale.decide(pending=pool.pending(),
+                                  idle=pool.idle_capacity(),
+                                  capacity=cap)
+        provider = getattr(pool, "provider", None)
+        if provider is not None and target > cap and has_events:
+            if not ramp_t0:
+                t_first, _ = pool.events.span()
+                ramp_t0.append(t_first)
+            elapsed = max(0.0, pool.events.clock.now() - ramp_t0[0])
+            granted = provider.allowed_concurrency(elapsed)
+            target = max(cap, min(target, granted))
+        if target != cap:
+            pool.resize(target)
+            autoscale.resize_log.append((cap, target))
 
     def scan_stragglers() -> None:
         # A straggler is a task *running* past the deadline — queued
@@ -252,16 +309,41 @@ def run_irregular(
         if controller is not None:
             shape = controller.update(len(outstanding))
         dispatch_ready(list(spec.split(f.result(), shape)), shape)
+        if autoscale is not None:
+            apply_autoscale()
 
     snap = pool.snapshot()
+    wall = time.monotonic() - t0
+    # sim pools bill/plot in virtual time (elapsed this run); real
+    # pools in wall time
+    vt = getattr(pool, "virtual_time_s", None)
+    makespan = (vt - vt0) if vt is not None else wall
+    cost = None
+    cold_starts = snap.get("cold_starts", 0)
+    concurrency_series: List[tuple] = []
+    capacity_series: List[tuple] = []
+    if has_events:
+        window = pool.events.tail(events_start)  # this run's events
+        cost = serverless_cost(window, wall_time_s=makespan,
+                               provider=getattr(pool, "provider", None))
+        concurrency_series = window.concurrency_series()
+        capacity_series = window.capacity_series()
+        cold_starts = window.cold_starts()
     return IrregularResult(
         output=spec.finalize(state),
-        wall_time_s=time.monotonic() - t0,
+        wall_time_s=wall,
         tasks=n_dispatched,
         peak_concurrency=snap.get("peak_concurrency", 0),
         controller_transitions=list(getattr(controller, "transitions", [])),
         speculated=speculated,
         pool_snapshot=snap,
+        makespan_s=makespan,
+        cost=cost,
+        concurrency_series=concurrency_series,
+        capacity_series=capacity_series,
+        cold_starts=cold_starts,
+        autoscale_decisions=(list(autoscale.resize_log)
+                             if autoscale is not None else []),
     )
 
 

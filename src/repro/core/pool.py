@@ -5,8 +5,9 @@ suffices to run all three irregular workloads with no user-facing
 tuning.  This module is that abstraction's single public surface:
 
 * :class:`Pool` — the lifecycle contract every backend satisfies:
-  ``submit`` / ``map`` / ``pending`` / ``idle_capacity`` / ``stats`` /
-  ``records`` / ``snapshot`` / ``shutdown`` / context manager.
+  ``submit`` / ``map`` / ``pending`` / ``idle_capacity`` / ``resize`` /
+  ``capacity`` / ``stats`` / ``events`` / ``records`` / ``snapshot`` /
+  ``shutdown`` / context manager.
 * :func:`make_pool` — construct any registered backend by name::
 
       with make_pool("elastic", max_concurrency=16) as pool:
@@ -29,7 +30,8 @@ from __future__ import annotations
 import abc
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from .futures import ElasticFuture, Task, TaskRecord, TaskState
+from .futures import (CompletionQueue, ElasticFuture, Task, TaskRecord,
+                      TaskState)
 
 __all__ = ["Pool", "make_pool", "register_pool", "registered_pools"]
 
@@ -75,10 +77,47 @@ class Pool(abc.ABC):
     def idle_capacity(self) -> int:
         """Free worker slots right now (drives hybrid placement)."""
 
+    # -- elasticity surface ------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Current worker-slot capacity (the ``resize`` target).
+        Composite pools override with their aggregate."""
+        return getattr(self, "max_concurrency", 1)
+
+    def resize(self, capacity: int) -> None:
+        """Set the pool's capacity; logs a ``capacity_grow`` /
+        ``capacity_shrink`` timeline event.  Every registered backend
+        implements this — it is the mechanism under
+        ``run_irregular``'s ``AutoscalePolicy`` hook."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support resize")
+
+    @property
+    def events(self):
+        """The pool's :class:`~repro.core.telemetry.EventLog` timeline
+        (composite pools return a merged view)."""
+        return self.stats.log
+
     # -- shared surface ----------------------------------------------------
     def map(self, fn: Callable[[Any], Any],
             items: Sequence[Any]) -> List[Any]:
+        """Submit ``fn`` over ``items`` and return results in order.
+
+        Failure is fail-fast but never orphaning: the first exception
+        cancels every not-yet-started sibling, the already-running ones
+        are drained to settlement, and only then is the exception
+        re-raised — no submitted future outlives the call."""
         futures = [self.submit(fn, item) for item in items]
+        cq = CompletionQueue(futures)
+        first_exc: Optional[BaseException] = None
+        for _ in range(len(futures)):
+            f = cq.next()
+            if first_exc is None and f.state is TaskState.FAILED:
+                first_exc = f._exc
+                for g in futures:
+                    g.cancel()  # no-op on settled/running futures
+        if first_exc is not None:
+            raise first_exc
         return [f.result() for f in futures]
 
     def _make_future(self, task: Task) -> ElasticFuture:

@@ -1,0 +1,190 @@
+"""FaaS provider model — cold starts, warm reuse, scaling ramp, billing.
+
+The paper's cost-performance claim (§4.3) rests on platform dynamics
+our pools previously ignored: a function invocation lands either on a
+*warm* container (overhead ~13 ms, Table 4) or a *cold* one (container
+provision + runtime init, hundreds of ms), warm containers are
+reclaimed after an idle keep-alive window, and concurrency does not
+appear instantly — AWS Lambda grants a burst (500-3000 by region) and
+then grows the limit by ~500/min.  "Benchmarking Parallelism in FaaS
+Platforms" (Barcelona-Pons & García-López, PAPERS.md) measures exactly
+these ramp/cold-start curves dominating real FaaS parallelism.
+
+:class:`ProviderModel` captures those dynamics as data.  One model
+instance drives both execution modes:
+
+* ``ElasticExecutor`` (real clock) sleeps the cold/warm overhead and
+  blocks admission beyond ``allowed_concurrency(elapsed)``;
+* ``SimPool`` (virtual clock) adds the same overhead to modelled task
+  durations and gates virtual starts on the same ramp.
+
+:class:`ContainerFleet` is the shared warm-container bookkeeping: LIFO
+reuse (most-recently-released container is the most likely to still be
+warm), keep-alive expiry, cold-start counting.  It is clock-agnostic —
+callers pass ``now`` from whichever :class:`~repro.core.telemetry.Clock`
+owns the pool.
+
+:class:`AutoscalePolicy` is the driver-side elasticity hook:
+``run_irregular`` consults it after every completion and calls
+``pool.resize`` — growing with frontier pressure (queued tasks),
+shrinking when the pool idles — clamped to what the provider ramp has
+made available.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, replace
+from typing import List, Optional, Tuple
+
+__all__ = ["ProviderModel", "ContainerFleet", "AutoscalePolicy"]
+
+
+@dataclass(frozen=True)
+class ProviderModel:
+    """Platform dynamics of a FaaS provider, as data.
+
+    cold_start_s         container provision + runtime init latency
+    warm_overhead_s      invocation overhead on a warm container
+                         (the paper's 13 ms, Table 4)
+    keep_alive_s         idle window before a warm container is
+                         reclaimed (AWS: minutes, exact value unpublished)
+    burst_concurrency    concurrency available instantly
+    scaling_ramp_per_min additional concurrency granted per minute
+                         after the burst is consumed (AWS: 500/min)
+    invoke_rate_limit    invocations per second (AWS: 10 000/s)
+    billing_granularity_s  execution time is rounded up to this
+                         (Lambda bills per ms)
+    memory_mb            billed container memory (Eq. 5's MB term)
+    """
+
+    name: str = "aws-lambda"
+    cold_start_s: float = 0.25
+    warm_overhead_s: float = 13e-3
+    keep_alive_s: float = 600.0
+    burst_concurrency: int = 1000
+    scaling_ramp_per_min: float = 500.0
+    invoke_rate_limit: Optional[float] = 10_000.0
+    billing_granularity_s: float = 0.001
+    memory_mb: int = 1769
+
+    def overhead_s(self, cold: bool) -> float:
+        """Invocation overhead for one attempt."""
+        return self.warm_overhead_s + (self.cold_start_s if cold else 0.0)
+
+    def allowed_concurrency(self, elapsed_s: float) -> int:
+        """Platform-granted concurrency ``elapsed_s`` after first use:
+        the burst plus the per-minute ramp (AWS's 500/min)."""
+        if self.scaling_ramp_per_min == float("inf"):
+            return 2 ** 31  # effectively unlimited
+        ramp = self.scaling_ramp_per_min * max(elapsed_s, 0.0) / 60.0
+        return int(self.burst_concurrency + ramp)
+
+    # -- presets -----------------------------------------------------------
+    @classmethod
+    def aws_lambda(cls, **overrides) -> "ProviderModel":
+        """The paper's measured platform (Table 4 + AWS public limits)."""
+        return replace(cls(), **overrides) if overrides else cls()
+
+    @classmethod
+    def prewarmed(cls, **overrides) -> "ProviderModel":
+        """Cold-start-free variant of the same platform — the paper's
+        warm-container assumption, and the ablation baseline."""
+        return replace(cls(name="aws-lambda-warm", cold_start_s=0.0),
+                       **overrides)
+
+    @classmethod
+    def local_vm(cls, **overrides) -> "ProviderModel":
+        """A host thread pool dressed as a provider: no cold starts, no
+        ramp, thread-spawn-grade overhead (Table 4's 18 us)."""
+        return replace(
+            cls(name="local-vm", cold_start_s=0.0, warm_overhead_s=18e-6,
+                keep_alive_s=float("inf"), burst_concurrency=10_000,
+                scaling_ramp_per_min=0.0,
+                invoke_rate_limit=None, billing_granularity_s=1.0),
+            **overrides)
+
+
+class ContainerFleet:
+    """Warm-container bookkeeping, shared by real and virtual pools.
+
+    ``acquire(now)`` returns ``(container_id, cold)``: a warm container
+    if one is idle and within its keep-alive window (LIFO — the most
+    recently released is reused first, which is both what platforms do
+    and what maximizes warm hits), else a fresh cold one.
+    ``release(container_id, now)`` returns it to the idle set.
+    """
+
+    def __init__(self, model: ProviderModel) -> None:
+        self.model = model
+        self._lock = threading.Lock()
+        self._idle: List[Tuple[float, int]] = []  # (released_at, id)
+        self._ids = itertools.count()
+        self.cold_starts = 0
+        self.warm_hits = 0
+
+    def _prune(self, now: float) -> None:
+        keep = self.model.keep_alive_s
+        self._idle = [(t, cid) for t, cid in self._idle
+                      if now - t <= keep]
+
+    def acquire(self, now: float) -> Tuple[int, bool]:
+        with self._lock:
+            self._prune(now)
+            if self._idle:
+                _, cid = self._idle.pop()  # LIFO: warmest first
+                self.warm_hits += 1
+                return cid, False
+            self.cold_starts += 1
+            return next(self._ids), True
+
+    def release(self, container_id: int, now: float) -> None:
+        with self._lock:
+            self._idle.append((now, container_id))
+
+    def warm_count(self, now: float) -> int:
+        with self._lock:
+            self._prune(now)
+            return len(self._idle)
+
+
+@dataclass
+class AutoscalePolicy:
+    """Driver-side elasticity: grow with the frontier, shrink when idle.
+
+    ``run_irregular`` calls :meth:`decide` after every completion and
+    applies the result via ``pool.resize`` (clamped to the provider
+    ramp when the pool has one).  The defaults implement the paper's
+    inherent-elasticity story: capacity follows the irregular frontier
+    up (queued tasks are immediate demand) and decays in the drain
+    phase, when pay-as-you-go billing makes idle capacity free to drop.
+
+    min_capacity / max_capacity   resize clamps
+    shrink_idle_fraction          shrink once more than this fraction
+                                  of capacity sits idle
+    shrink_factor                 fraction of the idle surplus released
+                                  per decision (gradual drain)
+
+    ``resize_log`` journals the (old, new) resizes the driver actually
+    *applied* — post-clamp — not raw :meth:`decide` outputs.
+    """
+
+    min_capacity: int = 1
+    max_capacity: int = 10_000
+    shrink_idle_fraction: float = 0.5
+    shrink_factor: float = 0.5
+    resize_log: List[Tuple[int, int]] = None
+
+    def __post_init__(self) -> None:
+        if self.resize_log is None:
+            self.resize_log = []
+
+    def decide(self, *, pending: int, idle: int, capacity: int) -> int:
+        """Target capacity given queued demand and idle supply.  Pure:
+        the caller clamps (provider ramp) and journals what it applies."""
+        if pending > 0:
+            return min(self.max_capacity, capacity + pending)
+        if idle > self.shrink_idle_fraction * capacity:
+            surplus = int(idle * self.shrink_factor)
+            return max(self.min_capacity, capacity - surplus)
+        return capacity

@@ -13,6 +13,21 @@ result queue, controller update, bag resizing, re-dispatch — is the
 same decision sequence as the real executor path, so the simulation
 isolates exactly the scheduling policy (static vs Listing-5 dynamic).
 
+The pool's clock is a shared :class:`~repro.core.telemetry.VirtualClock`
+and every lifecycle step lands on the same
+:class:`~repro.core.telemetry.EventLog` timeline the real executors
+write — submit / cold_start / start / complete / capacity events with
+*virtual* timestamps — so characterization, cost accounting, and the
+concurrency-over-time series work identically on simulated runs.
+
+Platform dynamics come from the same
+:class:`~repro.core.provider.ProviderModel` the real
+``ElasticExecutor`` consumes: cold starts charge provision latency into
+the modelled duration (warm containers are reused LIFO within the
+keep-alive window), and virtual starts beyond the provider's burst wait
+for the per-minute scaling ramp.  ``resize`` adjusts capacity at the
+current virtual instant, releasing waiting tasks on growth.
+
 Two surfaces:
 
 * :class:`SimPool` — a virtual-time backend satisfying the unified
@@ -36,6 +51,8 @@ from .adaptive import StagedController, TaskShape
 from .executor import ExecutorStats, FunctionThrottledError
 from .futures import ElasticFuture, Task, TaskRecord
 from .pool import Pool, register_pool
+from .provider import ContainerFleet, ProviderModel
+from .telemetry import VirtualClock
 
 __all__ = ["SimPool", "SimFuture", "SimPoolResult", "simulate_uts_pool"]
 
@@ -69,13 +86,15 @@ class SimPool(Pool):
     Task bodies execute eagerly (side effects and return values are
     exact); their *duration* is modelled as
 
-        t_task = invoke_overhead + duration_fn(task, result)
+        t_task = invocation_overhead + duration_fn(task, result)
 
     (default ``alpha_s_per_node * cost_hint``) and completion order /
     concurrency honours ``max_concurrency`` at the paper's true scale
-    (2 000 workers) on a single core.  ``stats``/``records`` carry
-    virtual timestamps, so characterization and cost accounting work
-    unchanged.
+    (2 000 workers) on a single core.  The invocation overhead is
+    either the flat ``invoke_overhead`` or, with a ``provider`` model,
+    the cold/warm overhead of the container the virtual start lands on.
+    The timeline (``events``) carries virtual timestamps, so
+    characterization and cost accounting work unchanged.
     """
 
     kind = "sim"
@@ -87,6 +106,7 @@ class SimPool(Pool):
         self,
         max_concurrency: int = 2000,
         *,
+        provider: Optional[ProviderModel] = None,
         invoke_overhead: float = 13e-3,
         alpha_s_per_node: float = 1e-6,
         duration_fn: Optional[Callable[[Task, Any], float]] = None,
@@ -96,27 +116,48 @@ class SimPool(Pool):
         if max_concurrency <= 0:
             raise ValueError("max_concurrency must be positive")
         self.max_concurrency = max_concurrency
+        self.provider = provider
+        if provider is not None:
+            invoke_overhead = provider.warm_overhead_s
         self.invoke_overhead = invoke_overhead
         self.alpha_s_per_node = alpha_s_per_node
         self.duration_fn = duration_fn
         self.throttle_mode = throttle_mode
         self.name = name or "sim-pool"
-        self.stats = ExecutorStats()
-        self.trace: List[Tuple[float, int]] = []  # (virtual t, active)
-        self._clock = 0.0
+        self.clock = VirtualClock()
+        self.stats = ExecutorStats(clock=self.clock)
+        self._fleet = (ContainerFleet(provider)
+                       if provider is not None else None)
         self._heap: List[Tuple[float, int, tuple]] = []
         self._waiting: deque = deque()
         self._seq = itertools.count()
         self._shutdown = False
+        self.stats.on_resize(0, max_concurrency)
 
     @property
     def virtual_time_s(self) -> float:
         """Current virtual clock (the makespan once drained)."""
-        return self._clock
+        return self.clock.now()
+
+    @property
+    def trace(self) -> List[Tuple[float, int]]:
+        """(virtual t, active) — derived from the timeline."""
+        return self.stats.log.concurrency_series()
 
     def _make_future(self, task: Task) -> ElasticFuture:
         # batch fan-out futures must pump the event heap when waited on
         return SimFuture(task, self)
+
+    def _allowed(self) -> int:
+        """Capacity usable at the current virtual instant: the pool
+        width, further clamped by the provider's scaling ramp."""
+        cap = self.max_concurrency
+        if self.provider is not None:
+            cap = min(cap, self.provider.allowed_concurrency(
+                self.clock.now()))
+        # virtual time only advances on completions: one slot must
+        # always be usable or a zero-burst ramp would deadlock the heap
+        return max(1, cap)
 
     # -- Pool contract -----------------------------------------------------
     def submit(self, fn: Callable[..., Any], *args: Any,
@@ -132,9 +173,9 @@ class SimPool(Pool):
                 f"{self.name}: concurrency limit "
                 f"{self.max_concurrency} reached")
         task = Task(fn=fn, args=args, kwargs=kwargs, cost_hint=cost_hint)
-        task.submit_time = self._clock
+        task.submit_time = self.clock.now()
         future = SimFuture(task, self)
-        self.stats.on_submit()
+        self.stats.on_submit(task.task_id)
         # run the body now (exact results); only *time* is simulated
         task.attempts = 1
         try:
@@ -143,12 +184,11 @@ class SimPool(Pool):
             result, exc = None, e
         # failed bodies have no result to model a duration from — bill
         # them the cost-hint default so the exception reaches pump time
-        dur = self.invoke_overhead + (
-            self.duration_fn(task, result)
-            if self.duration_fn is not None and exc is None
-            else self.alpha_s_per_node * cost_hint)
-        entry = (future, task, result, exc, dur)
-        if self.stats.active < self.max_concurrency:
+        body_dur = (self.duration_fn(task, result)
+                    if self.duration_fn is not None and exc is None
+                    else self.alpha_s_per_node * cost_hint)
+        entry = (future, task, result, exc, body_dur)
+        if self.stats.active < self._allowed():
             self._start(entry)
         else:
             self._waiting.append(entry)
@@ -161,6 +201,20 @@ class SimPool(Pool):
         return max(0, self.max_concurrency - self.stats.active
                    - len(self._waiting))
 
+    def resize(self, capacity: int) -> None:
+        """Adjust capacity at the current virtual instant.  Growth
+        starts waiting tasks immediately (subject to the provider
+        ramp); shrink takes effect as running tasks drain."""
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        old = self.max_concurrency
+        if capacity == old:
+            return
+        self.max_concurrency = capacity
+        self.stats.on_resize(old, capacity)
+        while self._waiting and self.stats.active < self._allowed():
+            self._start(self._waiting.popleft())
+
     def shutdown(self, wait: bool = True) -> None:
         if wait:
             while self._pump_one():
@@ -169,18 +223,27 @@ class SimPool(Pool):
 
     def snapshot(self) -> dict:
         snap = self.stats.snapshot()
-        snap["virtual_time_s"] = self._clock
+        snap["virtual_time_s"] = self.clock.now()
         return snap
 
     # -- event machinery ---------------------------------------------------
     def _start(self, entry: tuple) -> None:
-        future, task, result, exc, dur = entry
-        task.start_time = self._clock
+        future, task, result, exc, body_dur = entry
+        now = self.clock.now()
+        task.start_time = now
         task.worker = self.name
-        self.stats.on_start()
+        cold = False
+        if self._fleet is not None:
+            cid, cold = self._fleet.acquire(now)
+            task.worker = f"{self.name}-c{cid}"
+            if cold:
+                self.stats.on_cold_start(task.task_id, task.worker)
+        overhead = (self.provider.overhead_s(cold)
+                    if self.provider is not None else self.invoke_overhead)
+        self.stats.on_start(task.task_id, task.worker)
         future._set_running()
         heapq.heappush(self._heap,
-                       (self._clock + dur, next(self._seq), entry))
+                       (now + overhead + body_dur, next(self._seq), entry))
 
     def _pump_one(self) -> bool:
         """Advance virtual time by one completion event.  Returns False
@@ -189,20 +252,23 @@ class SimPool(Pool):
             return False
         end_vt, _, (future, task, result, exc, _dur) = \
             heapq.heappop(self._heap)
-        self._clock = end_vt
+        self.clock.advance_to(end_vt)
         task.end_time = end_vt
+        if self._fleet is not None:
+            # worker name carries the container id it ran on
+            cid = int(task.worker.rsplit("-c", 1)[1])
+            self._fleet.release(cid, end_vt)
         record = TaskRecord(
-            task_id=task.task_id, worker=self.name,
+            task_id=task.task_id, worker=task.worker,
             submit_time=task.submit_time, start_time=task.start_time,
             end_time=end_vt, cost_hint=task.cost_hint,
             remote=self.remote, attempts=task.attempts)
         self.stats.on_finish(record, ok=exc is None)
-        self.trace.append((self._clock, self.stats.active))
         if exc is not None:
             future._set_exception(exc)
         else:
             future._set_result(result)
-        while self._waiting and self.stats.active < self.max_concurrency:
+        while self._waiting and self.stats.active < self._allowed():
             self._start(self._waiting.popleft())
         return True
 

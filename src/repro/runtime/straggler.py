@@ -36,8 +36,12 @@ class SpeculativeExecutor(Pool):
 
     Satisfies the unified ``Pool`` contract itself (registered with
     ``make_pool`` as ``"speculative"``), so it composes transparently
-    with ``run_irregular`` and the stats/records surface of the inner
-    backend."""
+    with ``run_irregular`` and the stats/records/events surface of the
+    inner backend.  Batching, capacity, and resize forward to the
+    inner pool — ``speculative(sim)`` / ``speculative(local)`` still
+    fuse batches instead of silently decomposing, and the driver's
+    chunk sizing sees the true inner width rather than a
+    ``max_concurrency`` fallback of 1."""
 
     kind = "speculative"
 
@@ -71,6 +75,45 @@ class SpeculativeExecutor(Pool):
     @property
     def stats(self):
         return self.inner.stats
+
+    @property
+    def events(self):
+        return self.inner.events
+
+    @property
+    def supports_batching(self) -> bool:
+        return self.inner.supports_batching
+
+    @property
+    def max_concurrency(self) -> int:
+        return self.inner.capacity
+
+    @property
+    def capacity(self) -> int:
+        return self.inner.capacity
+
+    @property
+    def provider(self):
+        return getattr(self.inner, "provider", None)
+
+    @property
+    def virtual_time_s(self):
+        """Virtual makespan when wrapping a sim pool (None otherwise),
+        so the driver bills speculative(sim) in virtual time too."""
+        return getattr(self.inner, "virtual_time_s", None)
+
+    def resize(self, capacity: int) -> None:
+        self.inner.resize(capacity)
+
+    def submit_batch(self, batch_fn, items, **kw):
+        """Fusing inner pools take the whole batch as one invocation
+        (items inside a fused call are not individually watched for
+        stragglers — same contract as ``run_irregular``'s batching);
+        decomposing inners fall back to the per-item path through
+        ``self.submit`` so every item stays under the watchdog."""
+        if self.inner.supports_batching:
+            return self.inner.submit_batch(batch_fn, items, **kw)
+        return super().submit_batch(batch_fn, items, **kw)
 
     def pending(self) -> int:
         return self.inner.pending()

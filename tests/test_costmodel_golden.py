@@ -1,0 +1,129 @@
+"""Golden-value cost model tests: Eq. 3-8 at Table 3 prices, by hand.
+
+Every expected number below is computed from the paper's published
+prices (Table 3) and equations, independently of the implementation:
+
+    lambda_i = $2e-7 / invocation          (Eq. 4)
+    lambda_e = $1.66667e-5 / GB-second     (Eq. 5, memory 1769 MB)
+    client   = m5.xlarge $0.192/h          (Eq. 6)
+    EMR      = workers * $4.35 + $0.48/h   (Eq. 8)
+"""
+import math
+
+from repro.core import (CostReport, EventLog, LambdaPrice, VMPrice,
+                        VirtualClock, emr_cluster_cost,
+                        price_performance, serverless_cost, vm_cost)
+from repro.core.futures import TaskRecord
+from repro.core.telemetry import COMPLETE
+
+GB = 1769 / 1024                     # Eq. 5's MB/1024 term
+LAMBDA_I = 0.0000002
+LAMBDA_E = 0.0000166667
+M5_XLARGE = 0.192
+
+
+def _rec(duration, remote=True, attempts=1, task_id=0):
+    return TaskRecord(task_id=task_id, worker="w", submit_time=0.0,
+                      start_time=0.0, end_time=duration, cost_hint=1.0,
+                      remote=remote, attempts=attempts)
+
+
+# -- Eq. 3-6: serverless -------------------------------------------------------
+
+def test_eq3_6_golden_exact_durations():
+    # 100 tasks x 0.5 s, wall 30 s: all durations already on the ms grid
+    recs = [_rec(0.5, task_id=i) for i in range(100)]
+    rep = serverless_cost(recs, wall_time_s=30.0)
+    assert math.isclose(rep.invocations, 100 * LAMBDA_I, rel_tol=1e-12)
+    assert math.isclose(rep.execution, LAMBDA_E * GB * 50.0,
+                        rel_tol=1e-9)
+    assert math.isclose(rep.client, M5_XLARGE / 3600 * 30.0,
+                        rel_tol=1e-12)
+    assert math.isclose(rep.total,
+                        rep.invocations + rep.execution + rep.client,
+                        rel_tol=1e-12)
+
+
+def test_billing_granularity_ceiling():
+    # 1.0004 s bills as 1.001 s on Lambda's 1 ms grid
+    rep = serverless_cost([_rec(1.0004)], wall_time_s=2.0)
+    assert math.isclose(rep.execution, LAMBDA_E * GB * 1.001,
+                        rel_tol=1e-9)
+    # sub-granularity runs bill one full granule, never zero
+    rep = serverless_cost([_rec(0.0001)], wall_time_s=1.0)
+    assert math.isclose(rep.execution, LAMBDA_E * GB * 0.001,
+                        rel_tol=1e-9)
+    # coarser grid (e.g. 100 ms platforms): 0.25 s -> 0.3 s
+    rep = serverless_cost([_rec(0.25)], wall_time_s=1.0,
+                          billing_granularity_s=0.1)
+    assert math.isclose(rep.execution, LAMBDA_E * GB * 0.3, rel_tol=1e-9)
+
+
+def test_per_attempt_invoicing_for_speculated_duplicates():
+    """A task whose record says attempts=3 (two retries, or a
+    speculated duplicate pair plus the original) is invoiced three
+    times for both the invocation fee and the execution time."""
+    rep = serverless_cost([_rec(2.0, attempts=3)], wall_time_s=4.0)
+    assert math.isclose(rep.invocations, 3 * LAMBDA_I, rel_tol=1e-12)
+    assert math.isclose(rep.execution, LAMBDA_E * GB * 3 * 2.0,
+                        rel_tol=1e-9)
+
+
+def test_local_records_bill_client_only():
+    rep = serverless_cost([_rec(5.0, remote=False)], wall_time_s=5.0)
+    assert rep.invocations == 0.0 and rep.execution == 0.0
+    assert math.isclose(rep.client, M5_XLARGE / 3600 * 5.0, rel_tol=1e-12)
+
+
+def test_custom_memory_scales_eq5():
+    price = LambdaPrice(memory_mb=3538)       # 2x the paper's container
+    r1 = serverless_cost([_rec(1.0)], wall_time_s=1.0)
+    r2 = serverless_cost([_rec(1.0)], wall_time_s=1.0, price=price)
+    assert math.isclose(r2.execution, 2 * r1.execution, rel_tol=1e-9)
+
+
+def test_timeline_input_equals_record_input():
+    recs = [_rec(0.75, task_id=i, attempts=2) for i in range(7)]
+    log = EventLog(VirtualClock())
+    for r in recs:
+        log.emit(COMPLETE, t=r.end_time, ok=True, record=r)
+    a = serverless_cost(recs, wall_time_s=3.0)
+    b = serverless_cost(log, wall_time_s=3.0)
+    assert a.as_dict() == b.as_dict()
+
+
+# -- Eq. 7: price-performance --------------------------------------------------
+
+def test_eq7_golden():
+    # 1e6 nodes/s at a total cost of $0.004 -> 2.5e8 nodes/s/$
+    cost = CostReport(invocations=0.001, execution=0.002, client=0.001)
+    assert math.isclose(price_performance(1e6, cost), 2.5e8, rel_tol=1e-12)
+    assert price_performance(1.0, CostReport()) == float("inf")
+
+
+# -- Eq. 6/8: VM + EMR ---------------------------------------------------------
+
+def test_vm_cost_golden_and_minimum_billing():
+    # c5.24xlarge $4.08/h for 90 s
+    rep = vm_cost(90.0, VMPrice.named("c5.24xlarge"))
+    assert math.isclose(rep.total, 4.08 / 3600 * 90.0, rel_tol=1e-12)
+    # sub-second runs bill the 1 s minimum
+    assert math.isclose(vm_cost(0.2, VMPrice.named("c5.24xlarge")).total,
+                        4.08 / 3600 * 1.0, rel_tol=1e-12)
+
+
+def test_eq8_emr_golden():
+    # 4 workers x $4.35 + master $0.48, for 15 minutes
+    rep = emr_cluster_cost(900.0, workers=4)
+    assert math.isclose(rep.total, (4 * 4.35 + 0.48) / 3600 * 900.0,
+                        rel_tol=1e-12)
+
+
+def test_table6_shaped_comparison():
+    """Structural sanity at Table 6's scale: a short serverless burst
+    costs less than holding the EMR cluster for the (longer) cluster
+    run — the shape of the paper's cost win."""
+    serverless = serverless_cost(
+        [_rec(1.2, task_id=i) for i in range(500)], wall_time_s=20.0)
+    cluster = emr_cluster_cost(120.0, workers=10)
+    assert serverless.total < cluster.total

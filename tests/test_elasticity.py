@@ -1,0 +1,348 @@
+"""Elasticity contract: resize / AutoscalePolicy / provider model /
+unified event timeline, across all five registered backends."""
+import threading
+
+import pytest
+
+from repro.core import (AutoscalePolicy, ContainerFleet, EventLog,
+                        ProviderModel, TaskShape, VirtualClock, make_pool,
+                        run_irregular, serverless_cost)
+from repro.core.telemetry import (CAPACITY_GROW, CAPACITY_SHRINK,
+                                  COLD_START, COMPLETE, START, SUBMIT)
+
+BACKENDS = [
+    ("local", dict(max_concurrency=3, invoke_overhead=0.0)),
+    ("elastic", dict(max_concurrency=3, invoke_overhead=0.0,
+                     invoke_rate_limit=None)),
+    ("hybrid", dict(local_concurrency=2, elastic_concurrency=3)),
+    ("sim", dict(max_concurrency=3, invoke_overhead=1e-3)),
+    ("speculative", dict(inner="local",
+                         inner_cfg=dict(max_concurrency=3,
+                                        invoke_overhead=0.0),
+                         floor_s=30.0)),
+]
+IDS = [b[0] for b in BACKENDS]
+
+
+# -- timeline contract --------------------------------------------------------
+
+@pytest.mark.parametrize("kind,cfg", BACKENDS, ids=IDS)
+def test_timeline_records_lifecycle(kind, cfg):
+    """Every backend writes submit/start/complete events to one
+    EventLog; records and the concurrency curve derive from it."""
+    with make_pool(kind, **cfg) as pool:
+        fs = [pool.submit(lambda i=i: i * i) for i in range(8)]
+        assert sorted(f.result() for f in fs) == [i * i for i in range(8)]
+        log = pool.events
+        counts = log.counts()
+        assert counts[SUBMIT] == 8
+        assert counts[START] >= 8
+        assert counts[COMPLETE] == 8
+        # the initial capacity announcement is on the timeline
+        assert counts[CAPACITY_GROW] >= 1
+        assert len(log.records) == 8
+        series = log.concurrency_series()
+        assert series, "concurrency curve must be derivable"
+        assert max(a for _, a in series) <= pool.capacity
+        assert series[-1][1] == 0           # drained at the end
+        # records on the timeline ARE the pool's records surface
+        assert {r.task_id for r in log.records} \
+            == {r.task_id for r in pool.records}
+
+
+@pytest.mark.parametrize("kind,cfg", BACKENDS, ids=IDS)
+def test_resize_contract(kind, cfg):
+    """resize() moves capacity both ways, logs capacity events, and the
+    pool keeps executing correctly at the new width."""
+    with make_pool(kind, **cfg) as pool:
+        c0 = pool.capacity
+        pool.resize(c0 + 4)
+        assert pool.capacity == c0 + 4
+        grow = [e for e in pool.events.events(CAPACITY_GROW)
+                if e.capacity is not None]
+        assert any(e.capacity >= c0 + 1 for e in grow)
+        assert pool.map(lambda x: x + 1, list(range(6))) \
+            == list(range(1, 7))
+        pool.resize(max(1, c0))
+        shrink = pool.events.events(CAPACITY_SHRINK)
+        assert shrink and shrink[-1].capacity <= c0 + 4
+        assert pool.map(lambda x: x * 2, [1, 2]) == [2, 4]
+        series = pool.events.capacity_series()
+        assert series[-1][1] == pool.capacity
+
+
+def test_resize_rejects_nonpositive():
+    for kind, cfg in BACKENDS[:2] + [BACKENDS[3]]:
+        with make_pool(kind, **cfg) as pool:
+            with pytest.raises(ValueError):
+                pool.resize(0)
+
+
+def test_grown_capacity_is_actually_usable():
+    """After resize-up, the wider pool really runs more concurrently."""
+    with make_pool("local", max_concurrency=2, invoke_overhead=0.0) as p:
+        p.resize(6)
+        barrier = threading.Barrier(6, timeout=10)
+        fs = [p.submit(barrier.wait) for _ in range(6)]
+        for f in fs:
+            f.result(timeout=10)  # deadlocks unless 6 slots exist
+        assert p.stats.peak_concurrency >= 6
+
+
+# -- autoscale policy ---------------------------------------------------------
+
+def test_autoscale_policy_decisions():
+    pol = AutoscalePolicy(min_capacity=2, max_capacity=100)
+    # frontier pressure: queued tasks grow capacity
+    assert pol.decide(pending=10, idle=0, capacity=20) == 30
+    # clamped to max
+    assert pol.decide(pending=500, idle=0, capacity=20) == 100
+    # idle pool shrinks gradually
+    assert pol.decide(pending=0, idle=16, capacity=20) == 12
+    # floor respected
+    assert pol.decide(pending=0, idle=20, capacity=2) == 2
+    # busy-but-not-idle pool holds steady
+    assert pol.decide(pending=0, idle=1, capacity=20) == 20
+    # decide() is pure: only the driver journals applied resizes
+    assert pol.resize_log == []
+
+
+def test_run_irregular_autoscale_grows_and_shrinks():
+    """Driving UTS with an AutoscalePolicy: capacity follows the
+    frontier up and decays in the drain phase, all on the timeline."""
+    from repro.algorithms import UTSParams, uts_sequential, uts_spec
+    p = UTSParams(seed=19, b0=4.0, max_depth=6, chunk=1024)
+    pool = make_pool("sim", max_concurrency=2, invoke_overhead=1e-3)
+    r = run_irregular(pool, uts_spec(p), shape=TaskShape(16, 200),
+                      autoscale=AutoscalePolicy(min_capacity=2,
+                                                max_capacity=64))
+    pool.shutdown()
+    assert r.output == uts_sequential(p)
+    assert r.autoscale_decisions, "policy must have fired"
+    grew = [new for old, new in r.autoscale_decisions if new > old]
+    assert grew and max(grew) > 2, "frontier pressure must grow the pool"
+    assert r.capacity_series, "resizes are timeline events"
+    assert r.cost is not None and r.cost.total > 0
+
+
+def test_autoscale_honors_provider_ramp():
+    """Grow decisions are clamped to what the scaling ramp has granted:
+    burst 4 + 60/min means at most 4 + t virtual-seconds capacity."""
+    from repro.algorithms import UTSParams, uts_sequential, uts_spec
+    p = UTSParams(seed=19, b0=4.0, max_depth=6, chunk=1024)
+    prov = ProviderModel.aws_lambda(cold_start_s=0.0, burst_concurrency=4,
+                                    scaling_ramp_per_min=60.0)
+    pool = make_pool("sim", max_concurrency=4, provider=prov)
+    r = run_irregular(pool, uts_spec(p), shape=TaskShape(32, 100),
+                      autoscale=AutoscalePolicy(max_capacity=500))
+    pool.shutdown()
+    assert r.output == uts_sequential(p)
+    for t, cap in r.capacity_series[1:]:   # skip the construction event
+        assert cap <= max(4, prov.allowed_concurrency(t) + 1)
+    for t, active in r.concurrency_series:
+        assert active <= max(1, prov.allowed_concurrency(t))
+
+
+# -- provider model: cold/warm, keep-alive, ramp ------------------------------
+
+def test_container_fleet_lifo_reuse_and_expiry():
+    fleet = ContainerFleet(ProviderModel.aws_lambda(keep_alive_s=5.0))
+    c0, cold0 = fleet.acquire(0.0)
+    assert cold0
+    fleet.release(c0, 1.0)
+    c1, cold1 = fleet.acquire(2.0)      # within keep-alive: warm reuse
+    assert c1 == c0 and not cold1
+    fleet.release(c1, 3.0)
+    c2, cold2 = fleet.acquire(20.0)     # expired: cold again
+    assert cold2
+    assert fleet.cold_starts == 2 and fleet.warm_hits == 1
+
+
+def test_sim_pool_cold_then_warm():
+    """First wave is cold; the second wave reuses warm containers
+    within the keep-alive window — visible as cold_start events and as
+    a latency difference."""
+    prov = ProviderModel.aws_lambda(cold_start_s=0.5, keep_alive_s=60.0)
+    with make_pool("sim", max_concurrency=4, provider=prov) as pool:
+        first = [pool.submit(lambda: 1, cost_hint=100.0)
+                 for _ in range(4)]
+        for f in first:
+            f.result()
+        t_first = pool.virtual_time_s
+        assert pool.events.cold_starts() == 4
+        assert t_first >= 0.5               # cold wave paid provisioning
+        second = [pool.submit(lambda: 2, cost_hint=100.0)
+                  for _ in range(4)]
+        for f in second:
+            f.result()
+        assert pool.events.cold_starts() == 4   # all warm hits
+        warm_wave = pool.virtual_time_s - t_first
+        assert warm_wave < 0.5              # no provisioning latency
+
+
+def test_elastic_executor_cold_warm_via_provider():
+    """The real-clock executor consumes the same ProviderModel: cold
+    starts appear on the timeline and warm reuse stops them."""
+    prov = ProviderModel.aws_lambda(cold_start_s=1e-3,
+                                    warm_overhead_s=1e-4,
+                                    keep_alive_s=60.0,
+                                    burst_concurrency=2,
+                                    scaling_ramp_per_min=1e9,
+                                    invoke_rate_limit=None)
+    with make_pool("elastic", max_concurrency=2, provider=prov) as pool:
+        for f in [pool.submit(lambda i=i: i) for i in range(2)]:
+            f.result(timeout=10)
+        assert pool.events.cold_starts() == 2
+        for f in [pool.submit(lambda i=i: i) for i in range(6)]:
+            f.result(timeout=10)
+        # two containers serve everything: no further provisioning
+        assert pool.events.cold_starts() == 2
+        assert pool.snapshot()["cold_starts"] == 2
+
+
+def test_sim_ramp_gates_virtual_concurrency():
+    """burst=2, ramp=120/min: at virtual time t the platform grants
+    2 + 2t slots; the start events must respect that envelope."""
+    prov = ProviderModel.aws_lambda(cold_start_s=0.0, warm_overhead_s=0.0,
+                                    burst_concurrency=2,
+                                    scaling_ramp_per_min=120.0)
+    with make_pool("sim", max_concurrency=100, provider=prov,
+                   alpha_s_per_node=1.0) as pool:
+        fs = [pool.submit(lambda: 0, cost_hint=1.0) for _ in range(30)]
+        for f in fs:
+            f.result()
+        for t, active in pool.events.concurrency_series():
+            assert active <= max(1, prov.allowed_concurrency(t))
+        # but the ramp did unlock more than the burst over time
+        assert pool.stats.peak_concurrency > 2
+
+
+def test_one_model_two_clocks_same_invoice():
+    """The point of the provider layer: identical records through the
+    virtual and real pipelines bill identically (granularity + memory
+    from the model)."""
+    from repro.core.futures import TaskRecord
+    prov = ProviderModel.aws_lambda(billing_granularity_s=0.1,
+                                    memory_mb=2048)
+    recs = [TaskRecord(task_id=i, worker="w", submit_time=0.0,
+                       start_time=0.0, end_time=0.25, cost_hint=1.0,
+                       remote=True) for i in range(3)]
+    a = serverless_cost(recs, wall_time_s=1.0, provider=prov)
+    log = EventLog(VirtualClock())
+    for r in recs:
+        log.emit(COMPLETE, t=r.end_time, ok=True, record=r)
+    b = serverless_cost(log, wall_time_s=1.0, provider=prov)
+    assert a.as_dict() == b.as_dict()
+    # 0.25 s rounds UP to 0.3 s at 0.1 s granularity
+    assert abs(a.execution - 3 * 0.0000166667 * 2.0 * 0.3) < 1e-12
+
+
+def test_reused_pool_bills_per_run_not_cumulatively():
+    """Regression: a pool driven twice must not fold run 1's events
+    into run 2's cost/series/makespan (the log is cumulative; the
+    driver windows it)."""
+    from repro.core import WorkSpec
+    spec = WorkSpec(name="three", execute=lambda item, shape: item,
+                    seed=lambda shape: [1, 2, 3])
+    pool = make_pool("sim", max_concurrency=2, invoke_overhead=1e-3)
+    r1 = run_irregular(pool, spec)
+    r2 = run_irregular(pool, spec)
+    pool.shutdown()
+    assert abs(r1.cost.total - r2.cost.total) < 1e-12
+    assert len(r1.concurrency_series) == len(r2.concurrency_series) == 6
+    assert abs(r1.makespan_s - r2.makespan_s) < 1e-9
+    # run 2's series timestamps start where run 1 left off
+    assert r2.concurrency_series[0][0] >= r1.concurrency_series[-1][0]
+
+
+def test_hybrid_capacity_series_is_aggregate_only():
+    """Regression: the merged hybrid timeline must not interleave
+    sub-pool capacities with aggregate ones."""
+    with make_pool("hybrid", local_concurrency=2,
+                   elastic_concurrency=8) as pool:
+        pool.resize(12)
+        pool.resize(6)
+        series = pool.events.capacity_series()
+        assert [c for _, c in series] == [10, 12, 6]
+
+
+# -- Pool.map drain/cancel (satellite) ---------------------------------------
+
+def test_map_failure_cancels_remainder_no_orphans():
+    """First failure cancels the not-yet-started siblings and drains
+    the rest before re-raising — nothing keeps running after map()."""
+    import time as _time
+
+    def body(i):
+        if i == 1:
+            raise ValueError(f"boom on {i}")
+        _time.sleep(0.05)   # give the master time to cancel the tail
+        return i
+
+    with make_pool("local", max_concurrency=1, invoke_overhead=0.0,
+                   max_attempts=1) as p:
+        with pytest.raises(ValueError, match="boom"):
+            p.map(body, list(range(12)))
+        snap = p.snapshot()
+        assert snap["failed"] == 1
+        # serialized width-1 pool: item 0 ran, item 1 failed promptly,
+        # and the tail was cancelled rather than left running orphaned
+        assert snap["completed"] + snap["failed"] < 12
+        assert p.pending() == 0
+
+
+def test_map_failure_drains_on_sim_pool():
+    with make_pool("sim", max_concurrency=2) as p:
+        with pytest.raises(ZeroDivisionError):
+            p.map(lambda x: 1 // x, [1, 0, 1, 1])
+
+
+def test_map_success_unchanged():
+    with make_pool("elastic", max_concurrency=3, invoke_overhead=0.0,
+                   invoke_rate_limit=None) as p:
+        assert p.map(lambda x: x * x, [1, 2, 3, 4]) == [1, 4, 9, 16]
+
+
+# -- speculative forwarding (satellite) --------------------------------------
+
+def test_speculative_forwards_batching_and_width():
+    """speculative(sim) fuses batches like the bare sim pool: one
+    carrier invocation, not N decomposed submissions; width introspection
+    sees the inner pool, not a getattr fallback of 1."""
+    with make_pool("speculative", inner="sim",
+                   inner_cfg=dict(max_concurrency=8,
+                                  invoke_overhead=1e-3),
+                   floor_s=30.0) as pool:
+        assert pool.supports_batching
+        assert pool.max_concurrency == 8
+        assert pool.capacity == 8
+        fs = pool.submit_batch(lambda items: [i * 2 for i in items],
+                               [1, 2, 3, 4])
+        assert [f.result() for f in fs] == [2, 4, 6, 8]
+        # fused: ONE billed invocation for the whole batch
+        assert pool.snapshot()["invocations"] == 1
+
+
+def test_speculative_decomposing_inner_stays_watched():
+    """With a non-fusing inner, batches decompose through the wrapper's
+    own submit so every item stays under the straggler watchdog."""
+    with make_pool("speculative", inner="elastic",
+                   inner_cfg=dict(max_concurrency=4, invoke_overhead=0.0,
+                                  invoke_rate_limit=None),
+                   floor_s=30.0) as pool:
+        assert not pool.supports_batching
+        fs = pool.submit_batch(lambda items: [i + 1 for i in items],
+                               [1, 2, 3])
+        assert sorted(f.result() for f in fs) == [2, 3, 4]
+        assert pool.snapshot()["invocations"] == 3
+        assert len(pool._watches) >= 3  # watchdog saw each item
+
+
+def test_speculative_resize_forwards():
+    with make_pool("speculative", inner="local",
+                   inner_cfg=dict(max_concurrency=2,
+                                  invoke_overhead=0.0),
+                   floor_s=30.0) as pool:
+        pool.resize(5)
+        assert pool.capacity == 5
+        assert pool.inner.max_concurrency == 5

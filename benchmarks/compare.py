@@ -1,0 +1,141 @@
+"""Cross-PR benchmark comparison (ROADMAP: perf trajectory).
+
+Two jobs in one tool:
+
+1. **Drift gate** (same-PR): compare a freshly generated JSON against
+   the committed baseline for this PR.  Virtual-time metrics are
+   deterministic given the code, so large drift means a real
+   scheduling/billing regression (or an intentional change — then
+   regenerate the baseline).
+2. **Cross-PR regression flags**: diff the headline metrics against the
+   *previous* PR's committed baseline and fail on regressions in
+   ``ppr_serverless`` (price-performance must not fall),
+   ``cold_penalty_pct`` (the cold-start tax must not grow), and
+   ``us_per_call`` of shared rows (per-row headline latency).
+
+Usage (what CI runs)::
+
+    python benchmarks/compare.py BENCH_pr5.json \
+        --baseline benchmarks/BENCH_pr5.json \
+        --prev benchmarks/BENCH_pr4.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: same-PR drift tolerance on deterministic virtual-time metrics
+DRIFT_TOL = 0.25
+#: cross-PR tolerance before a regression is flagged
+REGRESSION_TOL = 0.15
+#: (row, derived key, direction) — direction "up" = bigger is worse
+CROSS_PR_KEYS = (
+    ("cost_performance_sim", "ppr_serverless", "down"),
+    ("cold_warm_ablation", "cold_penalty_pct", "up"),
+)
+#: deterministic keys gated against this PR's own committed baseline
+DRIFT_KEYS = (
+    ("cost_performance_sim", "serverless_vt_s"),
+    ("cost_performance_sim", "ppr_serverless"),
+    ("cost_performance_sim", "serverless_usd"),
+    ("cold_warm_ablation", "cold_vt_s"),
+    ("cold_warm_ablation", "cold_penalty_pct"),
+    ("trace_replay", "recorded_vt_s"),
+    ("trace_replay", "recorded_usd"),
+    ("trace_replay", "replay_gcf_vt_s"),
+)
+#: structural booleans that must hold on every run
+INVARIANTS = (
+    ("cost_performance_sim", "serverless_beats_vm"),
+    ("cold_warm_ablation", "penalty_measurable"),
+    ("trace_replay", "fit_within_tolerance"),
+    ("trace_replay", "bounded_memory"),
+)
+
+
+def _load(path):
+    rows = json.load(open(path))
+    return ({r["name"]: r["derived"] for r in rows},
+            {r["name"]: r["us_per_call"] for r in rows})
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="freshly generated JSON")
+    ap.add_argument("--baseline",
+                    help="this PR's committed baseline (drift gate)")
+    ap.add_argument("--prev",
+                    help="previous PR's committed baseline "
+                         "(cross-PR regression flags)")
+    args = ap.parse_args(argv)
+    cur, cur_us = _load(args.current)
+    failures = []
+
+    for row, key in INVARIANTS:
+        if row in cur and not cur[row].get(key, False):
+            failures.append(f"invariant {row}.{key} does not hold: "
+                            f"{cur[row].get(key)!r}")
+
+    if args.baseline:
+        base, _ = _load(args.baseline)
+        missing = set(base) - set(cur)
+        if missing:
+            failures.append(f"rows vanished vs baseline: {missing}")
+        for row, key in DRIFT_KEYS:
+            if row not in cur or row not in base:
+                continue
+            c, b = cur[row].get(key), base[row].get(key)
+            if c is None or b is None:
+                continue
+            drift = abs(c - b) / max(abs(b), 1e-9)
+            status = "FAIL" if drift > DRIFT_TOL else "ok"
+            print(f"[drift] {row}.{key}: baseline {b}, current {c} "
+                  f"({drift:.0%} {status})")
+            if drift > DRIFT_TOL:
+                failures.append(
+                    f"{row}.{key} drifted {drift:.0%} vs baseline "
+                    f"({b} -> {c}); regenerate intentionally or fix")
+
+    if args.prev:
+        prev, prev_us = _load(args.prev)
+        for row, key, direction in CROSS_PR_KEYS:
+            if row not in cur or row not in prev:
+                continue
+            c, p = cur[row].get(key), prev[row].get(key)
+            if c is None or p is None:
+                continue
+            delta = (c - p) / max(abs(p), 1e-9)
+            worse = delta > REGRESSION_TOL if direction == "up" \
+                else delta < -REGRESSION_TOL
+            status = "REGRESSION" if worse else "ok"
+            print(f"[cross-pr] {row}.{key}: prev {p}, current {c} "
+                  f"({delta:+.0%} {status})")
+            if worse:
+                failures.append(
+                    f"cross-PR regression in {row}.{key}: {p} -> {c}")
+        # us_per_call of rows both PRs ran (headline per-row latency);
+        # wall-clock rows are noisy on shared runners, so flag only
+        # the deterministic virtual-time rows
+        for row in sorted(set(cur_us) & set(prev_us)):
+            if row not in ("cost_performance_sim", "cold_warm_ablation"):
+                continue
+            c, p = cur_us[row], prev_us[row]
+            delta = (c - p) / max(abs(p), 1e-9)
+            worse = delta > REGRESSION_TOL
+            print(f"[cross-pr] {row}.us_per_call: prev {p}, current {c} "
+                  f"({delta:+.0%} {'REGRESSION' if worse else 'ok'})")
+            if worse:
+                failures.append(
+                    f"cross-PR us_per_call regression in {row}: "
+                    f"{p} -> {c}")
+
+    if failures:
+        print("\n".join(f"FAIL: {f}" for f in failures), file=sys.stderr)
+        return 1
+    print("benchmark comparison clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -430,6 +430,100 @@ def cold_warm_ablation() -> None:
          penalty_measurable=cold.makespan_s > warm.makespan_s)
 
 
+# -- PR5: record -> analyze -> calibrate -> replay (repro.trace) -----------------
+
+def trace_record_replay() -> None:
+    """The trace subsystem, end to end, at 100k+ events.
+
+    A paper-scale UTS run on the provider-modelled sim pool records
+    through the spill-backed ``TraceStore`` (bounded resident memory:
+    only the ring stays in RAM, everything streams to JSONL);
+    ``render_concurrency_figure`` emits the Fig. 4 concurrency +
+    capacity-staircase artifacts straight from the trace; the recorded
+    workload is then replayed — same provider (fidelity check), a
+    GCF-like platform, and an EWMA-autoscaled pool (what-if rows) —
+    and ``fit_provider`` recovers a known preset from a synthetic
+    saturating trace."""
+    from repro.trace import (TraceStore, calibrate, extract_workload,
+                             render_concurrency_figure, replay)
+
+    p = UTSParams(seed=19, b0=4.0, max_depth=9, chunk=2048)
+    prov = ProviderModel.aws_lambda()
+    store = TraceStore(ring_size=4096)  # spills to a temp JSONL
+    with make_pool("sim", max_concurrency=512, provider=prov,
+                   trace=store) as pool:
+        rec = run_irregular(pool, uts_spec(p), shape=TaskShape(32, 16))
+    events_total = len(store)
+    resident = store.resident_events
+
+    # what-if replays over one extraction (no algorithm re-run)
+    wl = extract_workload(store, provider=prov)
+    ewma_trace = TraceStore(ring_size=4096)
+    r_same = replay(wl, provider=prov, max_concurrency=512)
+    r_gcf = replay(wl, provider=ProviderModel.gcf(),
+                   max_concurrency=512)
+    r_ewma = replay(wl, provider=prov, max_concurrency=512,
+                    autoscale=AutoscalePolicy(
+                        min_capacity=32, max_capacity=512,
+                        ewma_alpha=0.5, grow_cooldown_s=0.05,
+                        shrink_cooldown_s=0.05),
+                    trace=ewma_trace)
+    parity_pct = 100 * abs(r_same.makespan_s - rec.makespan_s) \
+        / rec.makespan_s
+
+    # Fig. 4 artifacts straight from the traces (PNG when matplotlib
+    # is importable; CSV + ASCII always)
+    out_base = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "trace", "fig4_pr5")
+    arts = render_concurrency_figure(
+        {"recorded": store, "replay-ewma": ewma_trace}, out_base)
+    store.close()
+    ewma_trace.close()
+
+    # calibration: recover a known preset from its own synthetic trace
+    true = ProviderModel.aws_lambda(
+        cold_start_s=0.4, warm_overhead_s=0.02, burst_concurrency=5,
+        scaling_ramp_per_min=120.0)
+    with make_pool("sim", max_concurrency=1000, provider=true) as cp:
+        for f in [cp.submit(lambda: 0,
+                            cost_hint=1000 + (i * 7919) % 49000)
+                  for i in range(300)]:
+            f.result()
+        fit = calibrate(cp.events, name="fitted-aws")
+    fit_ok = (abs(fit.cold_start_s - true.cold_start_s)
+              <= 0.25 * true.cold_start_s
+              and abs(fit.warm_overhead_s - true.warm_overhead_s)
+              <= 0.25 * true.warm_overhead_s
+              and abs(fit.scaling_ramp_per_min
+                      - true.scaling_ramp_per_min)
+              <= 0.30 * true.scaling_ramp_per_min)
+
+    assert events_total >= 100_000, events_total
+    assert resident <= 4096, resident
+    assert r_same.tasks == rec.tasks
+    emit("trace_replay", rec.makespan_s * 1e6,
+         nodes=rec.output, tasks=rec.tasks,
+         events_total=events_total, resident_events=resident,
+         recorded_vt_s=round(rec.makespan_s, 3),
+         recorded_usd=round(rec.cost.total, 6),
+         recorded_cold_starts=rec.cold_starts,
+         replay_same_vt_s=round(r_same.makespan_s, 3),
+         replay_parity_pct=round(parity_pct, 3),
+         replay_gcf_vt_s=round(r_gcf.makespan_s, 3),
+         replay_gcf_usd=round(r_gcf.cost.total, 6),
+         gcf_slowdown_pct=round(
+             100 * (r_gcf.makespan_s / rec.makespan_s - 1), 1),
+         replay_ewma_vt_s=round(r_ewma.makespan_s, 3),
+         replay_ewma_usd=round(r_ewma.cost.total, 6),
+         ewma_resizes=len(r_ewma.autoscale_decisions),
+         fitted_cold_s=round(fit.cold_start_s, 4),
+         fitted_warm_ms=round(fit.warm_overhead_s * 1e3, 3),
+         fitted_ramp_per_min=round(fit.scaling_ramp_per_min, 1),
+         fit_within_tolerance=fit_ok,
+         figure_png=("png" in arts),
+         bounded_memory=resident <= 4096 < events_total)
+
+
 # -- Batch fusion: run_irregular with vs without execute_batch -------------------
 
 def fig_batch_fusion() -> None:
@@ -516,6 +610,7 @@ BENCHES = {
     "cost_perf_sim": cost_performance_sim,
     "cold_warm": cold_warm_ablation,
     "fig_batch_fusion": fig_batch_fusion,
+    "trace_replay": trace_record_replay,
     "roofline": roofline_from_dryrun,
 }
 

@@ -111,23 +111,30 @@ def serverless_cost(
     separate invoice line, exactly as the platform would bill it.  A
     ``provider`` model supplies the billing granularity and container
     memory unless explicitly overridden.
+
+    Accounting is a single streaming pass: an ``EventLog`` is consumed
+    through ``iter_records`` (spill-backed ``TraceStore`` timelines are
+    invoiced without ever materializing the record list), and any plain
+    iterable of ``TaskRecord`` works the same way.
     """
     if isinstance(records, EventLog):
-        records = records.records
+        records = records.iter_records()
     if price is None:
         price = (LambdaPrice(memory_mb=provider.memory_mb)
                  if provider is not None else LambdaPrice())
     if billing_granularity_s is None:
         billing_granularity_s = (provider.billing_granularity_s
                                  if provider is not None else 0.001)
-    remote = [r for r in records if r.remote]
-    n = sum(r.attempts for r in remote)  # every attempt is an invocation
+    n = 0          # every attempt is an invocation
+    billed = 0.0   # granularity-rounded execution seconds
+    for r in records:
+        if not r.remote:
+            continue
+        n += r.attempts
+        billed += max(billing_granularity_s,
+                      _ceil_to(r.duration, billing_granularity_s)) \
+            * r.attempts
     gb = price.memory_mb / 1024.0
-    billed = sum(
-        max(billing_granularity_s,
-            _ceil_to(r.duration, billing_granularity_s)) * r.attempts
-        for r in remote
-    )
     client = client_vm or VMPrice.named("m5.xlarge")
     return CostReport(
         invocations=price.invocation * n,

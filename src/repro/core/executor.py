@@ -222,6 +222,7 @@ class BaseExecutor(Pool):
         max_attempts: int = 3,
         seed: int = 0,
         name: Optional[str] = None,
+        trace: Optional[EventLog] = None,
     ) -> None:
         if max_concurrency <= 0:
             raise ValueError("max_concurrency must be positive")
@@ -236,7 +237,10 @@ class BaseExecutor(Pool):
         self.failure_rate = failure_rate
         self.max_attempts = max_attempts
         self.name = name or f"{self.kind}-pool"
-        self.stats = ExecutorStats()
+        # trace: a caller-supplied EventLog backend — typically a
+        # repro.trace.TraceStore, which spills to JSONL and keeps only a
+        # ring of events resident (million-event runs)
+        self.stats = ExecutorStats(log=trace)
         self._fleet = (ContainerFleet(provider)
                        if provider is not None else None)
         self._admit_lock = threading.Lock()

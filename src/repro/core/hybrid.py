@@ -49,9 +49,28 @@ class HybridExecutor(Pool):
         local_concurrency: int = 8,
         elastic_concurrency: int = 1000,
         policy: Optional[Callable[["HybridExecutor"], bool]] = None,
+        trace=None,
     ) -> None:
-        self.local = local or LocalExecutor(local_concurrency)
-        self.elastic = elastic or ElasticExecutor(elastic_concurrency)
+        # a caller-supplied trace backend (repro.trace.TraceStore) is
+        # SHARED by both sub-pools: their lifecycles interleave on one
+        # spilled timeline, which is exactly the combined history the
+        # merged view reconstructs for per-log pools.  Caveat: .events
+        # still materializes that timeline per access (the merged view
+        # must splice aggregate capacity events in) — recording stays
+        # bounded-memory, full-history *reads* do not (ROADMAP: lazy
+        # merged views).  Note the raw store's capacity_series mixes
+        # sub-pool widths and lacks the aggregate announcements — only
+        # .events carries the combined capacity staircase
+        self._shared_trace = trace
+        if trace is not None and (local is not None
+                                  or elastic is not None):
+            raise ValueError(
+                "trace= applies only to sub-pools the hybrid constructs "
+                "itself; pre-built pools already own their logs")
+        self.local = local or LocalExecutor(local_concurrency,
+                                            trace=trace)
+        self.elastic = elastic or ElasticExecutor(elastic_concurrency,
+                                                  trace=trace)
         # policy(hybrid) -> True to run locally. Default = paper's rule.
         self._policy = policy or (lambda h: h.local.idle_capacity() > 0)
         self._lock = threading.Lock()
@@ -93,9 +112,16 @@ class HybridExecutor(Pool):
         events are dropped (they carry sub-pool widths); the hybrid's
         own aggregate announcements stand in for them, keeping
         ``capacity_series()`` in one unit."""
-        merged = EventLog.merged(
-            [self.local.stats.log, self.elastic.stats.log],
-            exclude_kinds=(CAPACITY_GROW, CAPACITY_SHRINK))
+        if self._shared_trace is not None:
+            # one interleaved timeline already: just drop the sub-pool
+            # capacity announcements and splice in the aggregate ones
+            merged = EventLog.merged(
+                [self._shared_trace],
+                exclude_kinds=(CAPACITY_GROW, CAPACITY_SHRINK))
+        else:
+            merged = EventLog.merged(
+                [self.local.stats.log, self.elastic.stats.log],
+                exclude_kinds=(CAPACITY_GROW, CAPACITY_SHRINK))
         return EventLog.merged([merged, self._log])
 
     @property

@@ -159,7 +159,13 @@ def run_irregular(
     speculative_deadline  clone a task that has been *running* longer
                           than this many real seconds onto another
                           worker; first settlement wins, the loser is
-                          ignored (meaningful on real-time pools only)
+                          ignored (meaningful on real-time pools only).
+                          On pools with a ``ProviderModel`` the
+                          effective deadline additionally includes the
+                          expected clone overhead — the full cold-start
+                          penalty when no warm container is idle — so
+                          speculation only fires when a (likely cold)
+                          duplicate can still win
     timeout               overall wall-clock bound -> ``TimeoutError``
     batching              True: drain ready items through
                           ``pool.submit_batch`` in chunks of up to
@@ -177,7 +183,10 @@ def run_irregular(
                           individually tracked as RUNNING, so
                           ``speculative_deadline`` does not clone them
                           (the per-item decomposed path still
-                          speculates normally).
+                          speculates normally; the ``speculative``
+                          pool wrapper additionally re-dispatches the
+                          *remainder* of a straggling fused batch —
+                          see ``repro.runtime.straggler``).
     """
     t0 = time.monotonic()
     shape = shape or spec.shape
@@ -241,6 +250,9 @@ def run_irregular(
     # re-fetch pool.events at each use
     has_events = getattr(pool, "events", None) is not None
     events_start = len(pool.events) if has_events else 0
+    # hoisted once: composite pools rebuild their merged log on every
+    # .events access, but the underlying clock identity is stable
+    pool_clock = pool.events.clock if has_events else None
     vt0 = getattr(pool, "virtual_time_s", None) or 0.0
     ramp_t0: List[float] = []  # first-event timestamp, cached once
 
@@ -253,20 +265,44 @@ def run_irregular(
     def apply_autoscale() -> None:
         """Frontier-pressure grow / idle shrink, honoring the ramp."""
         cap = pool.capacity
+        # the policy's cooldowns run on the pool's clock (virtual on
+        # sim pools), so hysteresis windows are in billed time
+        now = (pool_clock.now() if pool_clock is not None
+               else time.monotonic())
         target = autoscale.decide(pending=pool.pending(),
                                   idle=pool.idle_capacity(),
-                                  capacity=cap)
+                                  capacity=cap, now=now)
         provider = getattr(pool, "provider", None)
         if provider is not None and target > cap and has_events:
             if not ramp_t0:
                 t_first, _ = pool.events.span()
                 ramp_t0.append(t_first)
-            elapsed = max(0.0, pool.events.clock.now() - ramp_t0[0])
+            elapsed = max(0.0, pool_clock.now() - ramp_t0[0])
             granted = provider.allowed_concurrency(elapsed)
             target = max(cap, min(target, granted))
         if target != cap:
             pool.resize(target)
             autoscale.resize_log.append((cap, target))
+
+    def clone_margin() -> float:
+        # provider-aware speculation (ROADMAP): a clone on a pool with
+        # no warm container idle lands cold — only call a task a
+        # straggler once a cold duplicate could still beat it.  The
+        # fleet is asked in the POOL's time domain (virtual fleets hold
+        # virtual release timestamps; a wall timestamp would make every
+        # container look expired).
+        provider = getattr(pool, "provider", None)
+        if provider is None:
+            return 0.0
+        fleet = getattr(pool, "_fleet", None)
+        if fleet is None:
+            warm = 0
+        else:
+            pool_clock = getattr(pool, "clock", None)
+            fleet_now = (pool_clock.now() if pool_clock is not None
+                         else time.monotonic())
+            warm = fleet.warm_count(fleet_now)
+        return provider.expected_clone_overhead(warm_available=warm > 0)
 
     def scan_stragglers() -> None:
         # A straggler is a task *running* past the deadline — queued
@@ -274,11 +310,12 @@ def run_irregular(
         # queue).  One clone per dispatch, first settlement wins.
         nonlocal speculated
         now = time.monotonic()
+        deadline_eff = speculative_deadline + clone_margin()
         for fut, d in list(outstanding.items()):
             if d.speculated or fut.state is not TaskState.RUNNING:
                 continue
             started = fut._task.start_time
-            if started is not None and now - started > speculative_deadline:
+            if started is not None and now - started > deadline_eff:
                 d.speculated = True
                 speculated += 1
                 _speculate(pool, spec, fut, d)
@@ -323,7 +360,14 @@ def run_irregular(
     concurrency_series: List[tuple] = []
     capacity_series: List[tuple] = []
     if has_events:
-        window = pool.events.tail(events_start)  # this run's events
+        # this run's events: when nothing but capacity announcements
+        # precede the run (every fresh pool emits one at construction),
+        # the window IS the log — spill-backed stores then serve the
+        # series from their incremental analytics in O(answer) instead
+        # of re-streaming a tail view per read
+        log = pool.events
+        window = (log if _prefix_is_capacity_only(log, events_start)
+                  else log.tail(events_start))
         cost = serverless_cost(window, wall_time_s=makespan,
                                provider=getattr(pool, "provider", None))
         concurrency_series = window.concurrency_series()
@@ -345,6 +389,24 @@ def run_irregular(
         autoscale_decisions=(list(autoscale.resize_log)
                              if autoscale is not None else []),
     )
+
+
+def _prefix_is_capacity_only(log: Any, start: int) -> bool:
+    """True when events ``[0, start)`` are all capacity announcements —
+    then the full log and the ``tail(start)`` window describe the same
+    run (capacity series additionally carries the initial width, which
+    is the staircase's true first step)."""
+    if start <= 0:
+        return True
+    from .telemetry import CAPACITY_GROW, CAPACITY_SHRINK
+    it = getattr(log, "iter_events", None)
+    events = it() if it is not None else iter(log.events())
+    for i, e in enumerate(events):
+        if i >= start:
+            break
+        if e.kind not in (CAPACITY_GROW, CAPACITY_SHRINK):
+            return False
+    return True
 
 
 def _speculate(pool: Pool, spec: WorkSpec, target: ElasticFuture,

@@ -72,6 +72,15 @@ class ProviderModel:
         """Invocation overhead for one attempt."""
         return self.warm_overhead_s + (self.cold_start_s if cold else 0.0)
 
+    def expected_clone_overhead(self, warm_available: bool) -> float:
+        """Expected invocation overhead of a *speculative duplicate*:
+        with no warm container idle, the clone almost surely lands cold
+        and pays the full provision latency before it can even start
+        racing the straggler.  The straggler watchdogs add this to their
+        deadline so speculation only fires when a (likely cold) clone
+        can still win (ROADMAP: provider-aware speculation)."""
+        return self.overhead_s(cold=not warm_available)
+
     def allowed_concurrency(self, elapsed_s: float) -> int:
         """Platform-granted concurrency ``elapsed_s`` after first use:
         the burst plus the per-minute ramp (AWS's 500/min)."""
@@ -92,6 +101,35 @@ class ProviderModel:
         warm-container assumption, and the ablation baseline."""
         return replace(cls(name="aws-lambda-warm", cold_start_s=0.0),
                        **overrides)
+
+    @classmethod
+    def gcf(cls, **overrides) -> "ProviderModel":
+        """Google Cloud Functions-like dynamics, fitted from synthetic
+        traces shaped on the FaaS-benchmarking literature
+        (Barcelona-Pons & García-López, PAPERS.md): second-scale cold
+        starts, no meaningful burst pool — instances are granted
+        gradually (the measured "slow ramp" that dominates GCF
+        parallelism) — longer keep-alive, 100 ms billing rounding."""
+        return replace(
+            cls(name="gcf", cold_start_s=2.2, warm_overhead_s=25e-3,
+                keep_alive_s=900.0, burst_concurrency=100,
+                scaling_ramp_per_min=120.0, invoke_rate_limit=1000.0,
+                billing_granularity_s=0.1, memory_mb=2048),
+            **overrides)
+
+    @classmethod
+    def azure_functions(cls, **overrides) -> "ProviderModel":
+        """Azure Functions (consumption plan)-like dynamics, fitted the
+        same way: the slowest cold starts of the big three, ~1 new
+        instance/second scale-out (~60/min), ~20 min keep-alive, 100 ms
+        minimum execution billing."""
+        return replace(
+            cls(name="azure-functions", cold_start_s=3.5,
+                warm_overhead_s=30e-3, keep_alive_s=1200.0,
+                burst_concurrency=200, scaling_ramp_per_min=60.0,
+                invoke_rate_limit=2000.0, billing_granularity_s=0.1,
+                memory_mb=1536),
+            **overrides)
 
     @classmethod
     def local_vm(cls, **overrides) -> "ProviderModel":
@@ -143,9 +181,13 @@ class ContainerFleet:
             self._idle.append((now, container_id))
 
     def warm_count(self, now: float) -> int:
+        """Idle containers still within keep-alive at ``now``.  A pure
+        read: unlike :meth:`acquire` it never prunes, so an observer on
+        the wrong clock (or peeking at the future) cannot corrupt the
+        fleet state."""
+        keep = self.model.keep_alive_s
         with self._lock:
-            self._prune(now)
-            return len(self._idle)
+            return sum(1 for t, _ in self._idle if now - t <= keep)
 
 
 @dataclass
@@ -164,6 +206,22 @@ class AutoscalePolicy:
                                   of capacity sits idle
     shrink_factor                 fraction of the idle surplus released
                                   per decision (gradual drain)
+    ewma_alpha                    None = react to instantaneous queue
+                                  depth (legacy).  Set (0, 1] to grow on
+                                  an exponentially-weighted moving
+                                  average of pending instead — spikes
+                                  stop triggering a resize per
+                                  completion, and demand accumulated
+                                  during a cooldown comes out as one
+                                  larger step (ROADMAP: most raw grow
+                                  decisions used to be clamped away by
+                                  the provider ramp).
+    grow_cooldown_s /             minimum time between issued grows /
+    shrink_cooldown_s             shrinks (hysteresis).  Time is the
+                                  driver's clock — virtual on sim pools
+                                  — passed as ``decide(..., now=...)``;
+                                  without a ``now`` the cooldowns are
+                                  inert (back-compat).
 
     ``resize_log`` journals the (old, new) resizes the driver actually
     *applied* — post-clamp — not raw :meth:`decide` outputs.
@@ -173,18 +231,68 @@ class AutoscalePolicy:
     max_capacity: int = 10_000
     shrink_idle_fraction: float = 0.5
     shrink_factor: float = 0.5
+    ewma_alpha: Optional[float] = None
+    grow_cooldown_s: float = 0.0
+    shrink_cooldown_s: float = 0.0
     resize_log: List[Tuple[int, int]] = None
 
     def __post_init__(self) -> None:
         if self.resize_log is None:
             self.resize_log = []
+        if self.ewma_alpha is not None \
+                and not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha must be in (0, 1]")
+        self._ewma: Optional[float] = None
+        self._last_grow_t: Optional[float] = None
+        self._last_shrink_t: Optional[float] = None
 
-    def decide(self, *, pending: int, idle: int, capacity: int) -> int:
-        """Target capacity given queued demand and idle supply.  Pure:
-        the caller clamps (provider ramp) and journals what it applies."""
-        if pending > 0:
-            return min(self.max_capacity, capacity + pending)
+    def _smoothed_pending(self, pending: int) -> float:
+        if self.ewma_alpha is None:
+            return float(pending)
+        if self._ewma is None:
+            self._ewma = float(pending)
+        else:
+            self._ewma = (self.ewma_alpha * pending
+                          + (1.0 - self.ewma_alpha) * self._ewma)
+        return self._ewma
+
+    def _cooled(self, last_t: Optional[float], cooldown: float,
+                now: Optional[float]) -> bool:
+        if now is None or cooldown <= 0.0 or last_t is None:
+            return True
+        if now < last_t:
+            # the clock went backwards: the policy instance moved to a
+            # different time domain (wall-clock run, then a virtual
+            # replay) — treat the stale stamp as expired rather than
+            # freezing resizes for the whole new run
+            return True
+        return now - last_t >= cooldown
+
+    def decide(self, *, pending: int, idle: int, capacity: int,
+               now: Optional[float] = None) -> int:
+        """Target capacity given queued demand and idle supply.  The
+        caller clamps (provider ramp) and journals what it applies;
+        smoothing/cooldown state is the policy's own."""
+        demand = self._smoothed_pending(pending)
+        # growth needs *live* queued work: a decaying EWMA after a
+        # spike must not keep widening an idle pool (the shrink branch
+        # takes over as soon as the queue is empty)
+        if pending > 0 and demand >= 1.0:
+            if not self._cooled(self._last_grow_t, self.grow_cooldown_s,
+                                now):
+                return capacity
+            target = min(self.max_capacity,
+                         capacity + int(round(demand)))
+            if target != capacity:
+                self._last_grow_t = now
+            return target
         if idle > self.shrink_idle_fraction * capacity:
+            if not self._cooled(self._last_shrink_t,
+                                self.shrink_cooldown_s, now):
+                return capacity
             surplus = int(idle * self.shrink_factor)
-            return max(self.min_capacity, capacity - surplus)
+            target = max(self.min_capacity, capacity - surplus)
+            if target != capacity:
+                self._last_shrink_t = now
+            return target
         return capacity

@@ -112,6 +112,7 @@ class SimPool(Pool):
         duration_fn: Optional[Callable[[Task, Any], float]] = None,
         throttle_mode: str = "queue",  # "queue" | "reject"
         name: Optional[str] = None,
+        trace=None,
     ) -> None:
         if max_concurrency <= 0:
             raise ValueError("max_concurrency must be positive")
@@ -125,7 +126,14 @@ class SimPool(Pool):
         self.throttle_mode = throttle_mode
         self.name = name or "sim-pool"
         self.clock = VirtualClock()
-        self.stats = ExecutorStats(clock=self.clock)
+        if trace is not None:
+            # adopt a caller-supplied timeline backend (typically a
+            # spill-to-disk repro.trace.TraceStore): rebind its clock so
+            # spilled events carry *virtual* timestamps
+            trace.clock = self.clock
+            self.stats = ExecutorStats(log=trace)
+        else:
+            self.stats = ExecutorStats(clock=self.clock)
         self._fleet = (ContainerFleet(provider)
                        if provider is not None else None)
         self._heap: List[Tuple[float, int, tuple]] = []

@@ -28,10 +28,19 @@ Now there is a single source of truth:
   :meth:`EventLog.concurrency_series`, :meth:`EventLog.capacity_series`,
   :meth:`EventLog.cold_starts` — are computed from the timeline, so
   ``characterization`` and ``costmodel`` read one artifact instead of
-  three.
+  three.  Since the ``repro.trace`` subsystem they are maintained
+  *incrementally* as events append (a
+  :class:`~repro.trace.analytics.TraceAnalytics` attached at
+  construction): the old sort-the-whole-log recompute — O(n log n) per
+  read — survives only as the fallback for timelines whose events were
+  injected out-of-band (:meth:`tail` / :meth:`merged` views) or whose
+  wall-clock timestamps landed out of order.
 
 ``EventLog.merged`` builds a read-only union timeline (used by
-``HybridExecutor`` to expose its two sub-pools as one history).
+``HybridExecutor`` to expose its two sub-pools as one history).  For
+bounded-memory recording at scale, use the ring-buffer + JSONL-spill
+subclass :class:`repro.trace.store.TraceStore` (every pool accepts it
+via the ``trace=`` constructor keyword).
 """
 from __future__ import annotations
 
@@ -59,6 +68,22 @@ CAPACITY_SHRINK = "capacity_shrink"
 
 EVENT_KINDS = (SUBMIT, COLD_START, START, REQUEUE, COMPLETE,
                CAPACITY_GROW, CAPACITY_SHRINK)
+
+_ANALYTICS_CLS = None
+
+
+def _new_analytics():
+    """Lazily bind ``repro.trace.analytics.TraceAnalytics`` — imported
+    at first :class:`EventLog` construction (never at module import) so
+    the core<-trace layering carries no import cycle."""
+    global _ANALYTICS_CLS
+    if _ANALYTICS_CLS is None:
+        try:
+            from ..trace.analytics import TraceAnalytics
+            _ANALYTICS_CLS = TraceAnalytics
+        except ImportError:  # pragma: no cover - trace pkg stripped
+            _ANALYTICS_CLS = False
+    return _ANALYTICS_CLS() if _ANALYTICS_CLS else None
 
 
 class Clock:
@@ -127,6 +152,7 @@ class EventLog:
         self.clock = clock or WallClock()
         self._lock = threading.Lock()
         self._events: List[Event] = []
+        self._analytics = _new_analytics()
 
     # -- write side --------------------------------------------------------
     def emit(self, kind: str, *, t: Optional[float] = None,
@@ -135,12 +161,27 @@ class EventLog:
              record: Optional[TaskRecord] = None) -> Event:
         if kind not in EVENT_KINDS:
             raise ValueError(f"unknown event kind {kind!r}")
-        ev = Event(t=self.clock.now() if t is None else t, kind=kind,
-                   task_id=task_id, worker=worker, capacity=capacity,
-                   ok=ok, record=record)
         with self._lock:
+            # stamp INSIDE the lock: arrival order then equals
+            # timestamp order by construction, so concurrent wall-clock
+            # emitters cannot race the analytics out of its monotone
+            # fast path
+            ev = Event(t=self.clock.now() if t is None else t, kind=kind,
+                       task_id=task_id, worker=worker, capacity=capacity,
+                       ok=ok, record=record)
             self._events.append(ev)
+            if self._analytics is not None:
+                self._analytics.observe(ev)
         return ev
+
+    def _valid_analytics(self):
+        """(Caller holds the lock.)  The incremental engine, iff it has
+        observed exactly this timeline in monotone order — the fast path
+        for every derived series below."""
+        a = self._analytics
+        if a is not None and a.valid(len(self._events)):
+            return a
+        return None
 
     # -- read side ---------------------------------------------------------
     def events(self, kind: Optional[str] = None) -> List[Event]:
@@ -159,6 +200,10 @@ class EventLog:
 
     def counts(self) -> dict:
         """Event count per kind (quick structural check)."""
+        with self._lock:
+            a = self._valid_analytics()
+            if a is not None:
+                return dict(a.counts)
         out = {k: 0 for k in EVENT_KINDS}
         for e in self.events():
             out[e.kind] += 1
@@ -170,11 +215,26 @@ class EventLog:
         return [e.record for e in self.events(COMPLETE)
                 if e.record is not None]
 
+    def iter_records(self):
+        """Stream completion records (single pass, no second list —
+        what ``costmodel`` consumes at scale)."""
+        for e in self.events(COMPLETE):
+            if e.record is not None:
+                yield e.record
+
     def cold_starts(self) -> int:
+        with self._lock:
+            a = self._valid_analytics()
+            if a is not None:
+                return a.cold_starts
         return len(self.events(COLD_START))
 
     def span(self) -> Tuple[float, float]:
         """(first, last) event timestamps; (0, 0) when empty."""
+        with self._lock:
+            a = self._valid_analytics()
+            if a is not None:
+                return a.span()
         evs = self.events()
         if not evs:
             return (0.0, 0.0)
@@ -183,7 +243,16 @@ class EventLog:
 
     def concurrency_series(self) -> List[Tuple[float, int]]:
         """(t, active) after every start / requeue / complete event —
-        the live concurrency-over-time curve (paper Fig. 4)."""
+        the live concurrency-over-time curve (paper Fig. 4).  Served
+        from the incremental analytics (O(answer)); the sorted recompute
+        below is the out-of-order / injected-events fallback."""
+        with self._lock:
+            a = self._valid_analytics()
+            if a is not None:
+                return list(a.concurrency)
+        return self._recompute_concurrency_series()
+
+    def _recompute_concurrency_series(self) -> List[Tuple[float, int]]:
         series: List[Tuple[float, int]] = []
         active = 0
         for e in sorted(self.events(), key=lambda e: e.t):
@@ -199,12 +268,23 @@ class EventLog:
     def capacity_series(self) -> List[Tuple[float, int]]:
         """(t, capacity) after every resize (includes the initial
         capacity announcement each pool emits at construction)."""
+        with self._lock:
+            a = self._valid_analytics()
+            if a is not None:
+                return list(a.capacity)
+        return self._recompute_capacity_series()
+
+    def _recompute_capacity_series(self) -> List[Tuple[float, int]]:
         return [(e.t, e.capacity)
                 for e in sorted(self.events(), key=lambda e: e.t)
                 if e.kind in (CAPACITY_GROW, CAPACITY_SHRINK)
                 and e.capacity is not None]
 
     def peak_concurrency(self) -> int:
+        with self._lock:
+            a = self._valid_analytics()
+            if a is not None:
+                return a.peak_concurrency
         series = self.concurrency_series()
         return max((a for _, a in series), default=0)
 

@@ -31,6 +31,24 @@ class _Watch:
     duplicated: bool = False
 
 
+@dataclass
+class _BatchWatch:
+    """A fused ``submit_batch`` carrier under watch: if the carrier
+    straggles, the *remaining items* (children not yet settled) are
+    re-dispatched individually (ROADMAP: batch-remainder
+    speculation)."""
+
+    children: List[ElasticFuture]
+    items: list
+    item_fn: Callable
+    submitted: float
+    respawned: bool = False
+
+    def remaining(self):
+        return [(c, it) for c, it in zip(self.children, self.items)
+                if not c.done()]
+
+
 class SpeculativeExecutor(Pool):
     """Wraps any pool with deadline-based task duplication.
 
@@ -56,7 +74,9 @@ class SpeculativeExecutor(Pool):
         self.max_duplicates = max_duplicates
         self.duplicates = 0
         self.wins_by_clone = 0
+        self.batch_respawns = 0   # straggling carriers re-dispatched
         self._watches: List[_Watch] = []
+        self._batch_watches: List[_BatchWatch] = []
         self._durations: List[float] = []
         self._lock = threading.Lock()
         self._stop = False
@@ -106,13 +126,26 @@ class SpeculativeExecutor(Pool):
         self.inner.resize(capacity)
 
     def submit_batch(self, batch_fn, items, **kw):
-        """Fusing inner pools take the whole batch as one invocation
-        (items inside a fused call are not individually watched for
-        stragglers — same contract as ``run_irregular``'s batching);
-        decomposing inners fall back to the per-item path through
-        ``self.submit`` so every item stays under the watchdog."""
-        if self.inner.supports_batching:
-            return self.inner.submit_batch(batch_fn, items, **kw)
+        """Fusing inner pools take the whole batch as one invocation;
+        the *carrier* goes under batch watch: when it straggles, the
+        remaining (unsettled) items are re-dispatched individually —
+        fused items no longer escape speculation, they just speculate
+        at remainder granularity.  Decomposing inners fall back to the
+        per-item path through ``self.submit`` so every item stays under
+        the ordinary per-task watchdog."""
+        items = list(items)
+        if self.inner.supports_batching and len(items) > 1:
+            children = self.inner.submit_batch(batch_fn, items, **kw)
+            item_fn = kw.get("item_fn")
+            if item_fn is None:
+                def item_fn(item):
+                    return batch_fn([item])[0]
+            with self._lock:
+                self._batch_watches.append(_BatchWatch(
+                    children, items, item_fn, time.monotonic()))
+            return children
+        # decomposed (or single-item) path goes through self.submit, so
+        # every item is individually watched
         return super().submit_batch(batch_fn, items, **kw)
 
     def pending(self) -> int:
@@ -126,7 +159,31 @@ class SpeculativeExecutor(Pool):
         self.inner.shutdown(wait=wait)
 
     # -- watchdog -------------------------------------------------------------
-    def _deadline(self) -> float:
+    def _clone_penalty(self) -> float:
+        """Expected extra overhead a speculative duplicate pays before
+        it can race: on a provider-modelled pool with no warm container
+        idle, the full cold-start latency (ROADMAP: provider-aware
+        speculation).  Added to the deadline so clones only launch when
+        they can still win."""
+        provider = self.provider
+        if provider is None:
+            return 0.0
+        fleet = getattr(self.inner, "_fleet", None)
+        if fleet is None:
+            warm = 0
+        else:
+            # ask in the inner pool's time domain: a virtual fleet holds
+            # virtual release timestamps, so a wall timestamp would make
+            # every warm container look keep-alive-expired
+            clock = getattr(self.inner, "clock", None)
+            now = clock.now() if clock is not None else time.monotonic()
+            warm = fleet.warm_count(now)
+        return provider.expected_clone_overhead(warm_available=warm > 0)
+
+    def _base_deadline(self) -> float:
+        """Quantile-derived per-task deadline, without the clone
+        penalty (which is a one-time cost and must not be scaled by
+        batch size)."""
         with self._lock:
             if len(self._durations) < 5:
                 return max(self.floor_s, 1e9 if not self._durations
@@ -135,11 +192,16 @@ class SpeculativeExecutor(Pool):
             p50 = xs[len(xs) // 2]
             return max(self.floor_s, self.factor * p50)
 
+    def _deadline(self) -> float:
+        return self._base_deadline() + self._clone_penalty()
+
     def _watchdog(self) -> None:
         while not self._stop:
             time.sleep(self.poll_s)
             now = time.monotonic()
-            deadline = self._deadline()
+            base = self._base_deadline()
+            penalty = self._clone_penalty()
+            deadline = base + penalty
             with self._lock:
                 live = []
                 to_clone = []
@@ -155,12 +217,36 @@ class SpeculativeExecutor(Pool):
                         to_clone.append(w)
                     live.append(w)
                 self._watches = live
+                live_b = []
+                to_respawn = []
+                for bw in self._batch_watches:
+                    n_items = max(1, len(bw.items))
+                    if all(c.done() for c in bw.children):
+                        # feed the quantiles a per-item sample so
+                        # pure-batch workloads still learn a deadline
+                        self._durations.append(
+                            (now - bw.submitted) / n_items)
+                        if len(self._durations) > 512:
+                            del self._durations[:256]
+                        continue
+                    # a fused carrier runs its items serially — the
+                    # per-item bar scales with the batch — but the
+                    # clone penalty is a one-time cost, added once
+                    if (not bw.respawned
+                            and now - bw.submitted
+                            > base * n_items + penalty):
+                        bw.respawned = True
+                        to_respawn.append(bw)
+                    live_b.append(bw)
+                self._batch_watches = live_b
             for w in to_clone:
                 if self.duplicates - self.wins_by_clone \
                         >= self.max_duplicates * 8:
                     continue  # bound clone storms
                 self.duplicates += 1
                 self._clone(w)
+            for bw in to_respawn:
+                self._respawn_remainder(bw)
 
     def _clone(self, w: _Watch) -> None:
         target = w.future
@@ -176,3 +262,35 @@ class SpeculativeExecutor(Pool):
             self.inner.submit(run_clone)
         except RuntimeError:
             pass  # executor shutting down
+
+    def _respawn_remainder(self, bw: _BatchWatch) -> None:
+        """Re-dispatch the unsettled items of a straggling fused batch
+        as individual tasks.  Each clone resolves its own child future;
+        first settlement wins, so a late carrier fan-out is a no-op for
+        items the remainder already delivered (and vice versa)."""
+        remaining = bw.remaining()
+        if not remaining:
+            return
+        issued = 0
+        for child, item in remaining:
+            # same clone-storm bound as per-task speculation, enforced
+            # per clone — a huge remainder must not flood the pool
+            if self.duplicates - self.wins_by_clone \
+                    >= self.max_duplicates * 8:
+                break
+            self.duplicates += 1
+            issued += 1
+
+            def run_clone(child=child, item=item):
+                result = bw.item_fn(item)
+                if not child.done():
+                    self.wins_by_clone += 1
+                    child._set_result(result)
+                return result
+
+            try:
+                self.inner.submit(run_clone)
+            except RuntimeError:
+                break  # executor shutting down
+        if issued:
+            self.batch_respawns += 1

@@ -1,0 +1,41 @@
+"""``repro.trace`` — record, analyze, calibrate, and replay execution
+timelines (the PR-5 subsystem).
+
+The paper's evidence is timeline-shaped: Fig. 4 is a concurrency trace,
+the §4.3 frontier is read off cost-accounted traces.  This package
+makes traces first-class:
+
+* :class:`~repro.trace.store.TraceStore` — bounded-memory streaming
+  backend for the ``EventLog`` API (in-memory ring + JSONL spill +
+  seekable reader); pass as ``trace=`` to any pool.
+* :class:`~repro.trace.analytics.TraceAnalytics` — incremental,
+  single-pass derived views (concurrency/capacity series, cold starts,
+  per-worker utilization) maintained as events append;
+  :func:`~repro.trace.analytics.render_concurrency_figure` emits the
+  Fig. 4 artifact set (PNG when matplotlib is present; CSV/ASCII
+  always).
+* :mod:`~repro.trace.replay` — reconstruct a recorded run's
+  task-arrival/duration structure and re-execute it on ``SimPool``
+  under a different provider or autoscale policy (what-if analysis).
+* :func:`~repro.trace.calibrate.fit_provider` — estimate a
+  :class:`~repro.core.provider.ProviderModel` (cold/warm overhead,
+  burst, ramp, keep-alive bound) from a pool's own timeline.
+
+The record -> analyze -> calibrate -> replay recipe is documented in
+the README ("Recording, replaying, and calibrating traces").
+"""
+from .analytics import TraceAnalytics, render_concurrency_figure
+from .calibrate import ProviderFit, calibrate, fit_provider
+from .replay import (ReplayTask, ReplayWorkload, extract_workload,
+                     replay, replay_spec, what_if)
+from .store import (TraceReader, TraceStore, event_from_dict,
+                    event_to_dict, read_trace)
+
+__all__ = [
+    "TraceStore", "TraceReader", "read_trace",
+    "event_to_dict", "event_from_dict",
+    "TraceAnalytics", "render_concurrency_figure",
+    "ReplayTask", "ReplayWorkload", "extract_workload", "replay_spec",
+    "replay", "what_if",
+    "ProviderFit", "calibrate", "fit_provider",
+]

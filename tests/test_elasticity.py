@@ -143,6 +143,64 @@ def test_autoscale_honors_provider_ramp():
         assert active <= max(1, prov.allowed_concurrency(t))
 
 
+def test_autoscale_ewma_and_cooldown_decisions():
+    """EWMA-of-pending + grow cooldown: demand accumulated during the
+    cooldown comes out as one larger step instead of many tiny ones."""
+    pol = AutoscalePolicy(ewma_alpha=0.5, grow_cooldown_s=10.0,
+                          max_capacity=1000)
+    assert pol.decide(pending=8, idle=0, capacity=10, now=0.0) == 18
+    # within cooldown: no resize issued, but the EWMA keeps tracking
+    assert pol.decide(pending=16, idle=0, capacity=18, now=1.0) == 18
+    assert pol.decide(pending=16, idle=0, capacity=18, now=5.0) == 18
+    # cooldown expired: one larger step from the smoothed demand
+    assert pol.decide(pending=16, idle=0, capacity=18, now=11.0) == 33
+    # without a clock the cooldowns are inert (legacy call shape)
+    legacy = AutoscalePolicy(grow_cooldown_s=10.0)
+    assert legacy.decide(pending=5, idle=0, capacity=10) == 15
+    assert legacy.decide(pending=5, idle=0, capacity=10) == 15
+    with pytest.raises(ValueError):
+        AutoscalePolicy(ewma_alpha=1.5)
+    # a clock-domain switch (wall run -> virtual replay) must not
+    # freeze the cooldown: a backwards clock reads as expired
+    pol2 = AutoscalePolicy(grow_cooldown_s=10.0)
+    assert pol2.decide(pending=5, idle=0, capacity=10,
+                       now=100_000.0) == 15
+    assert pol2.decide(pending=5, idle=0, capacity=10, now=0.5) == 15
+
+
+def test_autoscale_smoothing_fewer_larger_resizes():
+    """ROADMAP item: raw grow decisions used to fire per completion and
+    get clamped away by the ramp; the smoothed policy applies fewer,
+    larger resizes on the same run."""
+    from repro.algorithms import UTSParams, uts_sequential, uts_spec
+    p = UTSParams(seed=19, b0=4.0, max_depth=7, chunk=1024)
+
+    def drive(policy):
+        pool = make_pool("sim", max_concurrency=2, invoke_overhead=1e-3)
+        r = run_irregular(pool, uts_spec(p), shape=TaskShape(16, 100),
+                          autoscale=policy)
+        pool.shutdown()
+        return r
+
+    inst = drive(AutoscalePolicy(min_capacity=2, max_capacity=256))
+    # cooldowns are in the pool's (virtual) time: this run's makespan
+    # is a few virtual milliseconds, so 10 ms of hysteresis spans it
+    smooth = drive(AutoscalePolicy(min_capacity=2, max_capacity=256,
+                                   ewma_alpha=0.6,
+                                   grow_cooldown_s=0.01,
+                                   shrink_cooldown_s=0.01))
+    assert inst.output == smooth.output == uts_sequential(p)
+    assert smooth.autoscale_decisions, "smoothed policy must still act"
+    assert len(smooth.autoscale_decisions) < len(inst.autoscale_decisions)
+    grows_i = [new - old for old, new in inst.autoscale_decisions
+               if new > old]
+    grows_s = [new - old for old, new in smooth.autoscale_decisions
+               if new > old]
+    assert grows_i and grows_s
+    # fewer decisions, each moving capacity further
+    assert sum(grows_s) / len(grows_s) > sum(grows_i) / len(grows_i)
+
+
 # -- provider model: cold/warm, keep-alive, ramp ------------------------------
 
 def test_container_fleet_lifo_reuse_and_expiry():

@@ -1,0 +1,140 @@
+"""Straggler-speculation satellites: batch-remainder re-dispatch and
+provider-aware clone deadlines."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (ProviderModel, TaskShape, WorkSpec, make_pool,
+                        run_irregular)
+
+
+# -- provider-aware clone thresholds ------------------------------------------
+
+def test_expected_clone_overhead():
+    prov = ProviderModel.aws_lambda(cold_start_s=0.7,
+                                    warm_overhead_s=0.01)
+    assert prov.expected_clone_overhead(warm_available=True) \
+        == pytest.approx(0.01)
+    assert prov.expected_clone_overhead(warm_available=False) \
+        == pytest.approx(0.71)
+
+
+def test_speculative_deadline_includes_cold_penalty():
+    """With no warm container idle the watchdog deadline stretches by
+    the full provisioning latency; a warm container retracts it."""
+    prov = ProviderModel.aws_lambda(cold_start_s=7.0,
+                                    warm_overhead_s=0.0,
+                                    invoke_rate_limit=None)
+    with make_pool("speculative", inner="elastic",
+                   inner_cfg=dict(max_concurrency=2, provider=prov),
+                   floor_s=0.5) as pool:
+        pool._durations.extend([0.01] * 6)   # quantiles warmed up
+        assert pool._deadline() == pytest.approx(0.5 + 7.0)
+        # a warm container appears: clones land warm, deadline relaxes
+        pool.inner._fleet.release(0, time.monotonic())
+        assert pool._deadline() == pytest.approx(0.5)
+
+
+def test_run_irregular_speculation_waits_for_cold_clone_to_pay():
+    """Same slow tasks, same deadline: without a provider the driver
+    clones every straggler; when every clone would land cold
+    (keep_alive 0 — released containers expire instantly) the expected
+    cold penalty outlasts the tasks, so no duplicate is ever issued."""
+    spec = WorkSpec(name="slow",
+                    execute=lambda item, shape: time.sleep(0.1) or item,
+                    seed=lambda shape: [1, 2, 3])
+    with make_pool("elastic", max_concurrency=3, invoke_overhead=1.0,
+                   invoke_rate_limit=None) as pool:
+        r = run_irregular(pool, spec, speculative_deadline=0.3)
+    assert r.speculated == 3            # overhead-blind: clones fire
+    prov = ProviderModel.aws_lambda(cold_start_s=1.0,
+                                    warm_overhead_s=0.0,
+                                    keep_alive_s=0.0,
+                                    invoke_rate_limit=None)
+    with make_pool("elastic", max_concurrency=3, provider=prov) as pool:
+        r = run_irregular(pool, spec, speculative_deadline=0.3)
+    assert r.speculated == 0            # a cold clone could never win
+
+
+def test_watchdog_does_not_corrupt_virtual_fleet():
+    """Regression: the watchdog's warm-container query runs on the
+    inner pool's clock and never prunes — a wall-clock peek at a
+    virtual fleet used to expire every warm container, turning all
+    subsequent sim tasks into cold starts."""
+    prov = ProviderModel.aws_lambda(cold_start_s=0.5, keep_alive_s=60.0)
+    with make_pool("speculative", inner="sim",
+                   inner_cfg=dict(max_concurrency=4, provider=prov),
+                   floor_s=0.05, poll_s=0.01) as pool:
+        for f in [pool.submit(lambda: 1, cost_hint=100.0)
+                  for _ in range(4)]:
+            f.result()
+        time.sleep(0.15)                # several watchdog ticks
+        inner = pool.inner
+        assert inner._fleet.warm_count(inner.clock.now()) == 4
+        for f in [pool.submit(lambda: 2, cost_hint=100.0)
+                  for _ in range(4)]:
+            f.result()
+        assert inner.events.cold_starts() == 4   # all warm reuses
+
+
+# -- batch-remainder speculation ----------------------------------------------
+
+def test_batch_remainder_respawned_when_carrier_straggles():
+    """A straggling fused carrier no longer strands its items: the
+    unsettled remainder is re-dispatched per item and resolves the
+    children; the late carrier's fan-out loses the settlement race."""
+    release = threading.Event()
+
+    def batch_fn(items):
+        release.wait(timeout=30)        # the straggling carrier
+        return [i * 10 for i in items]
+
+    def item_fn(item):
+        return item * 10
+
+    with make_pool("speculative", inner="local",
+                   inner_cfg=dict(max_concurrency=2,
+                                  invoke_overhead=0.0),
+                   floor_s=0.15, poll_s=0.02) as pool:
+        # warm up the duration quantiles so the deadline is the floor
+        for f in [pool.submit(lambda: 0) for _ in range(6)]:
+            f.result(timeout=10)
+        time.sleep(0.1)                 # let the watchdog record them
+        fs = pool.submit_batch(batch_fn, [1, 2, 3], item_fn=item_fn)
+        t0 = time.monotonic()
+        assert [f.result(timeout=10) for f in fs] == [10, 20, 30]
+        waited = time.monotonic() - t0
+        release.set()
+        assert waited < 5.0             # did not wait out the carrier
+        assert pool.batch_respawns == 1
+        assert pool.duplicates >= 3     # one clone per remaining item
+        assert pool.wins_by_clone >= 3
+
+
+def test_batch_watch_drops_completed_batches():
+    """Fast fused batches are never respawned."""
+    with make_pool("speculative", inner="local",
+                   inner_cfg=dict(max_concurrency=2,
+                                  invoke_overhead=0.0),
+                   floor_s=0.1, poll_s=0.02) as pool:
+        for f in [pool.submit(lambda: 0) for _ in range(6)]:
+            f.result(timeout=10)
+        fs = pool.submit_batch(lambda items: [i + 1 for i in items],
+                               [1, 2, 3])
+        assert [f.result(timeout=10) for f in fs] == [2, 3, 4]
+        time.sleep(0.3)                 # several watchdog periods
+        assert pool.batch_respawns == 0
+
+
+def test_single_item_batch_stays_on_watched_path():
+    """len-1 batches decompose through the wrapper's submit, keeping
+    the per-task watchdog engaged (no unwatched carrier)."""
+    with make_pool("speculative", inner="local",
+                   inner_cfg=dict(max_concurrency=2,
+                                  invoke_overhead=0.0),
+                   floor_s=30.0) as pool:
+        fs = pool.submit_batch(lambda items: [i * 2 for i in items], [21])
+        assert [f.result(timeout=10) for f in fs] == [42]
+        assert len(pool._watches) >= 1
+        assert not pool._batch_watches

@@ -1,0 +1,424 @@
+"""repro.trace subsystem: incremental-analytics parity, ring+spill
+round-trip, seekable reads, replay fidelity/what-if, calibration, and
+the Fig. 4 renderer artifacts."""
+import os
+
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core import (EventLog, ProviderModel, TaskShape, VirtualClock,
+                        make_pool, run_irregular, serverless_cost)
+from repro.core.futures import TaskRecord
+from repro.core.telemetry import (CAPACITY_GROW, CAPACITY_SHRINK,
+                                  COLD_START, COMPLETE, REQUEUE, START,
+                                  SUBMIT)
+from repro.trace import (TraceReader, TraceStore, calibrate,
+                         extract_workload, fit_provider, read_trace,
+                         render_concurrency_figure, replay, what_if)
+
+UTS = pytest.importorskip("repro.algorithms")
+
+
+# -- incremental analytics == recompute (satellite: parity property) ----------
+
+_KIND_CODES = [SUBMIT, COLD_START, START, REQUEUE, COMPLETE,
+               CAPACITY_GROW, CAPACITY_SHRINK]
+
+
+def _emit_stream(log, ops):
+    """Interpret draws as a monotone-timestamp event stream."""
+    t = 0.0
+    for code, dt, cap in ops:
+        t += dt
+        kind = _KIND_CODES[code]
+        rec = None
+        if kind == COMPLETE:
+            rec = TaskRecord(task_id=1, worker="w", submit_time=0.0,
+                             start_time=t - dt, end_time=t,
+                             cost_hint=1.0, remote=True)
+        log.emit(kind, t=t, task_id=1, worker="w",
+                 capacity=cap if kind in (CAPACITY_GROW, CAPACITY_SHRINK)
+                 else None,
+                 ok=True if kind == COMPLETE else None,
+                 record=rec)
+
+
+@settings(max_examples=25)
+@given(st.lists(st.tuples(st.integers(0, len(_KIND_CODES) - 1),
+                          st.floats(0.0, 0.5),
+                          st.integers(1, 64)),
+                min_size=0, max_size=120))
+def test_incremental_equals_recompute_on_random_streams(ops):
+    log = EventLog(VirtualClock())
+    _emit_stream(log, ops)
+    # the public readers take the incremental path...
+    assert log._analytics is not None
+    assert log._analytics.valid(len(log.events()))
+    # ...and must equal the sorted recompute exactly
+    assert log.concurrency_series() == log._recompute_concurrency_series()
+    assert log.capacity_series() == log._recompute_capacity_series()
+    assert log.peak_concurrency() == max(
+        (a for _, a in log._recompute_concurrency_series()), default=0)
+
+
+@settings(max_examples=10)
+@given(st.lists(st.tuples(st.integers(0, len(_KIND_CODES) - 1),
+                          st.floats(0.0, 0.5),
+                          st.integers(1, 64)),
+                min_size=0, max_size=80))
+def test_trace_store_series_match_eventlog(ops):
+    # no fixtures here: @given composes with the deterministic stub
+    log = EventLog(VirtualClock())
+    store = TraceStore(VirtualClock(), ring_size=16)  # temp spill file
+    try:
+        _emit_stream(log, ops)
+        _emit_stream(store, ops)
+        assert store.concurrency_series() == log.concurrency_series()
+        assert store.capacity_series() == log.capacity_series()
+        assert store.counts() == log.counts()
+        assert store.cold_starts() == log.cold_starts()
+        assert store.span() == log.span()
+    finally:
+        store.close()   # store-owned temp spill: close() deletes it
+        assert not os.path.exists(store.path)
+
+
+def test_out_of_order_timestamps_fall_back_to_recompute():
+    """Wall-clock jitter (t2 < t1 appended later) must not silently
+    corrupt the series: the incremental path disables itself."""
+    log = EventLog(VirtualClock())
+    log.emit(START, t=1.0, task_id=1)
+    log.emit(START, t=0.5, task_id=2)       # out of order
+    log.emit(COMPLETE, t=2.0, task_id=1)
+    log.emit(COMPLETE, t=2.5, task_id=2)
+    assert not log._analytics.monotone
+    # sorted recompute: starts at 0.5 and 1.0
+    assert log.concurrency_series() == [(0.5, 1), (1.0, 2),
+                                        (2.0, 1), (2.5, 0)]
+
+
+def test_injected_views_use_recompute():
+    """tail()/merged() inject events past the analytics — the views
+    must still answer correctly (fallback path)."""
+    a, b = EventLog(VirtualClock()), EventLog(VirtualClock())
+    a.emit(START, t=0.0)
+    a.emit(COMPLETE, t=2.0)
+    b.emit(START, t=1.0)
+    b.emit(COMPLETE, t=3.0)
+    m = EventLog.merged([a, b])
+    assert m.concurrency_series() == [(0.0, 1), (1.0, 2),
+                                      (2.0, 1), (3.0, 0)]
+    t = a.tail(1)
+    assert t.concurrency_series() == [(2.0, -1)]
+
+
+# -- ring buffer + JSONL spill (satellite: lossless round-trip) ---------------
+
+def _mixed_events(n):
+    for i in range(n):
+        k = i % 5
+        if k == 0:
+            yield dict(kind=SUBMIT, task_id=i, worker=None)
+        elif k == 1:
+            yield dict(kind=COLD_START, task_id=i, worker=f"w{i % 7}")
+        elif k == 2:
+            yield dict(kind=START, task_id=i, worker=f"w{i % 7}")
+        elif k == 3:
+            yield dict(kind=COMPLETE, task_id=i, worker=f"w{i % 7}",
+                       ok=bool(i % 2),
+                       record=TaskRecord(
+                           task_id=i, worker=f"w{i % 7}",
+                           submit_time=i * 0.25, start_time=i * 0.5,
+                           end_time=i * 0.5 + 1 / 3, cost_hint=i * 1.75,
+                           remote=bool(i % 3), attempts=1 + i % 4))
+        else:
+            yield dict(kind=CAPACITY_GROW, capacity=i + 1)
+
+
+def test_ring_spill_roundtrip_100k(tmp_path):
+    """A 100k-event trace spills losslessly while only ring_size events
+    stay resident; the seekable reader reproduces it exactly."""
+    n = 100_000
+    path = str(tmp_path / "big.jsonl")
+    store = TraceStore(VirtualClock(), ring_size=512, path=path)
+    for i, kw in enumerate(_mixed_events(n)):
+        store.emit(t=float(i) * 0.001, **kw)
+    assert len(store) == n
+    assert store.resident_events == 512          # bounded memory
+    assert store.counts()[SUBMIT] == n // 5
+
+    # full history streams back exactly
+    evs = store.events()
+    assert len(evs) == n
+    for i, e in enumerate(evs):
+        assert e.t == i * 0.001
+        assert e.kind == _KIND_CODES[[0, 1, 2, 4, 5][i % 5]]
+    # records round-trip every TaskRecord field (floats included)
+    recs = [e.record for e in evs if e.record is not None]
+    assert len(recs) == n // 5
+    r = recs[1]
+    i = r.task_id
+    assert (r.submit_time, r.start_time, r.end_time, r.cost_hint) \
+        == (i * 0.25, i * 0.5, i * 0.5 + 1 / 3, i * 1.75)
+    assert isinstance(r.remote, bool)
+
+    # seekable mid-trace reads (sparse index, no full scan semantics)
+    offset = 73_210
+    tail = list(store.iter_events(offset))
+    assert len(tail) == n - offset
+    assert tail[0].t == offset * 0.001
+
+    # an independent reader over the finished file sees the same trace
+    store.close()
+    reader = read_trace(path)
+    assert isinstance(reader, TraceReader)
+    assert reader.count() == n
+    # iter_from seeks: second pass benefits from the built index
+    seg = list(reader.iter_from(99_990))
+    assert len(seg) == 10 and seg[0].t == 99_990 * 0.001
+
+
+def test_store_closed_rejects_emit(tmp_path):
+    store = TraceStore(path=str(tmp_path / "x.jsonl"))
+    store.emit(SUBMIT, task_id=0)
+    store.close()
+    with pytest.raises(RuntimeError):
+        store.emit(SUBMIT, task_id=1)
+
+
+@pytest.mark.parametrize("kind,cfg", [
+    ("local", dict(max_concurrency=3, invoke_overhead=0.0)),
+    ("elastic", dict(max_concurrency=3, invoke_overhead=0.0,
+                     invoke_rate_limit=None)),
+    ("sim", dict(max_concurrency=3, invoke_overhead=1e-3)),
+    ("hybrid", dict(local_concurrency=2, elastic_concurrency=3)),
+])
+def test_pools_record_through_trace_store(kind, cfg, tmp_path):
+    """trace= plugs the spill-backed store in behind every backend; the
+    lifecycle contract is unchanged."""
+    store = TraceStore(ring_size=8, path=str(tmp_path / f"{kind}.jsonl"))
+    with make_pool(kind, trace=store, **cfg) as pool:
+        fs = [pool.submit(lambda i=i: i * i) for i in range(12)]
+        assert sorted(f.result(timeout=30) for f in fs) \
+            == [i * i for i in range(12)]
+        counts = store.counts()
+        assert counts[SUBMIT] == 12
+        assert counts[COMPLETE] == 12
+        assert store.resident_events == 8
+        assert len({r.task_id for r in store.records}) == 12
+        # the pool's own events surface reads through the same store
+        assert pool.events.counts()[COMPLETE] >= 12
+
+
+def test_windowed_runs_on_trace_store(tmp_path):
+    """A reused traced pool still bills per run (lazy tail windows)."""
+    from repro.core import WorkSpec
+    spec = WorkSpec(name="three", execute=lambda item, shape: item,
+                    seed=lambda shape: [1, 2, 3])
+    store = TraceStore(ring_size=4, path=str(tmp_path / "w.jsonl"))
+    pool = make_pool("sim", max_concurrency=2, invoke_overhead=1e-3,
+                     trace=store)
+    r1 = run_irregular(pool, spec)
+    r2 = run_irregular(pool, spec)
+    pool.shutdown()
+    assert abs(r1.cost.total - r2.cost.total) < 1e-12
+    assert len(r1.concurrency_series) == len(r2.concurrency_series) == 6
+    assert abs(r1.makespan_s - r2.makespan_s) < 1e-9
+
+
+# -- replay (satellite: same-provider fidelity; tentpole: what-if) ------------
+
+def _recorded_uts_run(tmp_path, provider, max_depth=7):
+    from repro.algorithms import UTSParams, uts_spec
+    p = UTSParams(seed=19, b0=4.0, max_depth=max_depth, chunk=512)
+    store = TraceStore(ring_size=256,
+                       path=str(tmp_path / "uts.jsonl"))
+    pool = make_pool("sim", max_concurrency=64, provider=provider,
+                     trace=store)
+    r = run_irregular(pool, uts_spec(p), shape=TaskShape(8, 100))
+    pool.shutdown()
+    return store, r
+
+
+def test_replay_same_provider_reproduces_run(tmp_path):
+    prov = ProviderModel.aws_lambda(cold_start_s=0.3)
+    store, rec = _recorded_uts_run(tmp_path, prov)
+    rep = replay(store, recorded_provider=prov, provider=prov,
+                 max_concurrency=64)
+    assert rep.tasks == rec.tasks
+    assert abs(rep.makespan_s - rec.makespan_s) \
+        <= 0.01 * rec.makespan_s
+    assert abs(rep.cost.total - rec.cost.total) <= 0.01 * rec.cost.total
+    store.close()
+
+
+def test_replay_what_if_alternate_provider_and_policy(tmp_path):
+    """The whole point: same recorded workload, different platform /
+    policy, comparable CostReports — without re-running UTS."""
+    from repro.core import AutoscalePolicy
+    prov = ProviderModel.aws_lambda(cold_start_s=0.4)
+    store, rec = _recorded_uts_run(tmp_path, prov)
+    wl = extract_workload(store, provider=prov)
+    assert wl.n_tasks == rec.tasks
+    assert wl.recorded_cold_starts == rec.cold_starts
+    outs = what_if(wl, {
+        "prewarmed": dict(provider=ProviderModel.prewarmed(),
+                          max_concurrency=64),
+        "gcf": dict(provider=ProviderModel.gcf(), max_concurrency=64),
+        "ewma": dict(provider=prov, max_concurrency=64,
+                     autoscale=AutoscalePolicy(
+                         min_capacity=4, max_capacity=64,
+                         ewma_alpha=0.3, grow_cooldown_s=0.05)),
+    })
+    # same work everywhere
+    assert {o.tasks for o in outs.values()} == {rec.tasks}
+    # no cold starts => strictly faster than the cold recording
+    assert outs["prewarmed"].makespan_s < rec.makespan_s
+    # GCF-like ramp + slower cold starts => slower than AWS-like
+    assert outs["gcf"].makespan_s > outs["prewarmed"].makespan_s
+    for o in outs.values():
+        assert o.cost is not None and o.cost.total > 0
+    store.close()
+
+
+def test_replay_providerless_recording_no_double_overhead(tmp_path):
+    """A flat-overhead recording replays at parity: the flat overhead
+    is subtracted at extraction and re-applied via invoke_overhead —
+    never silently double-counted by SimPool's 13 ms default."""
+    from repro.algorithms import UTSParams, uts_spec
+    p = UTSParams(seed=19, b0=4.0, max_depth=6, chunk=512)
+    store = TraceStore(ring_size=128, path=str(tmp_path / "f.jsonl"))
+    pool = make_pool("sim", max_concurrency=32, invoke_overhead=13e-3,
+                     trace=store)
+    rec = run_irregular(pool, uts_spec(p), shape=TaskShape(8, 100))
+    pool.shutdown()
+    wl = extract_workload(store, overhead_s=13e-3)
+    rep = replay(wl, max_concurrency=32, invoke_overhead=13e-3)
+    assert rep.tasks == rec.tasks
+    assert abs(rep.makespan_s - rec.makespan_s) \
+        <= 0.01 * rec.makespan_s
+    store.close()
+
+
+def test_extract_workload_structure():
+    """Submits between completions attach to the spawning completion."""
+    log = EventLog(VirtualClock())
+
+    def complete(tid, t0, t1):
+        log.emit(COMPLETE, t=t1, task_id=tid, ok=True,
+                 record=TaskRecord(task_id=tid, worker="w",
+                                   submit_time=t0, start_time=t0,
+                                   end_time=t1, cost_hint=1.0,
+                                   remote=True))
+
+    log.emit(SUBMIT, t=0.0, task_id=1)          # seed
+    log.emit(START, t=0.0, task_id=1)
+    complete(1, 0.0, 1.0)
+    log.emit(SUBMIT, t=1.0, task_id=2)          # children of 1
+    log.emit(SUBMIT, t=1.0, task_id=3)
+    log.emit(START, t=1.0, task_id=2)
+    complete(2, 1.0, 2.0)
+    log.emit(SUBMIT, t=2.0, task_id=4)          # child of 2
+    log.emit(START, t=2.0, task_id=3)
+    complete(3, 2.0, 3.0)
+    log.emit(START, t=3.0, task_id=4)
+    complete(4, 3.0, 4.0)
+    wl = extract_workload(log)
+    assert [r.task_id for r in wl.roots] == [1]
+    root = wl.roots[0]
+    assert [c.task_id for c in root.children] == [2, 3]
+    assert [c.task_id for c in root.children[0].children] == [4]
+    assert wl.n_tasks == 4
+    assert wl.recorded_makespan_s == 4.0
+
+
+# -- calibration (tentpole part 4) --------------------------------------------
+
+def test_fit_provider_recovers_known_preset():
+    """Drive a saturating synthetic workload under a known model; the
+    fit must recover cold/warm overhead and the ramp within tolerance
+    from the trace alone."""
+    true = ProviderModel.aws_lambda(
+        cold_start_s=0.4, warm_overhead_s=0.02, burst_concurrency=5,
+        scaling_ramp_per_min=120.0, keep_alive_s=300.0)
+    pool = make_pool("sim", max_concurrency=1000, provider=true)
+    fs = [pool.submit(lambda: 0, cost_hint=1000 + (i * 7919) % 49000)
+          for i in range(300)]
+    for f in fs:
+        f.result()
+    fit = calibrate(pool.events, name="fitted-aws")
+    pool.shutdown()
+    assert fit.n_cold > 0 and fit.n_warm > 0
+    assert abs(fit.warm_overhead_s - true.warm_overhead_s) \
+        <= 0.25 * true.warm_overhead_s
+    assert abs(fit.cold_start_s - true.cold_start_s) \
+        <= 0.25 * true.cold_start_s
+    assert abs(fit.scaling_ramp_per_min - true.scaling_ramp_per_min) \
+        <= 0.30 * true.scaling_ramp_per_min
+    assert abs(fit.burst_concurrency - true.burst_concurrency) <= 3
+    # keep-alive evidence is a lower bound, never above the truth here
+    assert fit.keep_alive_lower_bound_s is None \
+        or fit.keep_alive_lower_bound_s <= true.keep_alive_s
+    # the public entry point returns the model itself
+    m = fit_provider(pool.events, name="fitted-aws")
+    assert isinstance(m, ProviderModel) and m.name == "fitted-aws"
+
+
+# -- Fig. 4 renderer ----------------------------------------------------------
+
+def test_render_concurrency_figure_artifacts(tmp_path):
+    log = EventLog(VirtualClock())
+    log.emit(CAPACITY_GROW, t=0.0, capacity=2)
+    for i in range(4):
+        log.emit(START, t=float(i))
+    log.emit(CAPACITY_GROW, t=4.0, capacity=8)
+    for i in range(4):
+        log.emit(COMPLETE, t=5.0 + i)
+    arts = render_concurrency_figure(
+        {"static": log, "dynamic": log.concurrency_series()},
+        str(tmp_path / "fig4"))
+    assert os.path.exists(arts["csv"])
+    assert os.path.exists(arts["txt"])
+    rows = open(arts["csv"]).read().splitlines()
+    assert rows[0] == "label,series,t,value"
+    assert any(r.startswith("static,capacity,") for r in rows)
+    assert any(r.startswith("dynamic,concurrency,") for r in rows)
+    txt = open(arts["txt"]).read()
+    assert "peak=4" in txt
+    try:
+        import matplotlib  # noqa: F401
+    except ImportError:
+        assert "png" not in arts
+    else:
+        assert os.path.getsize(arts["png"]) > 0
+
+
+def test_render_requires_traces():
+    with pytest.raises(ValueError):
+        render_concurrency_figure({}, "/tmp/nope")
+
+
+# -- utilization / streamed billing -------------------------------------------
+
+def test_worker_utilization_and_streamed_cost(tmp_path):
+    store = TraceStore(VirtualClock(), ring_size=4,
+                       path=str(tmp_path / "u.jsonl"))
+    store.emit(START, t=0.0, task_id=1, worker="a")
+    store.emit(START, t=0.0, task_id=2, worker="b")
+    store.emit(COMPLETE, t=1.0, task_id=1, worker="a", ok=True,
+               record=TaskRecord(task_id=1, worker="a", submit_time=0.0,
+                                 start_time=0.0, end_time=1.0,
+                                 cost_hint=1.0, remote=True))
+    store.emit(COMPLETE, t=2.0, task_id=2, worker="b", ok=True,
+               record=TaskRecord(task_id=2, worker="b", submit_time=0.0,
+                                 start_time=0.0, end_time=2.0,
+                                 cost_hint=1.0, remote=True))
+    util = store.utilization()
+    assert util["a"] == pytest.approx(0.5)
+    assert util["b"] == pytest.approx(1.0)
+    # billing streams from the spill file (records never materialized)
+    cost = serverless_cost(store, wall_time_s=2.0)
+    ref = serverless_cost(store.records, wall_time_s=2.0)
+    assert cost.as_dict() == ref.as_dict()
+    store.close()

@@ -44,6 +44,11 @@ DRIFT_KEYS = (
     ("trace_replay", "recorded_vt_s"),
     ("trace_replay", "recorded_usd"),
     ("trace_replay", "replay_gcf_vt_s"),
+    ("serving_knee", "knee_p99_ms"),
+    ("serving_knee", "knee_cost_per_mtok_usd"),
+    ("serving_knee", "slo_p99_ms"),
+    ("serving_knee", "slo_provisioned_usd"),
+    ("serving_knee", "slo_savings_pct"),
 )
 #: structural booleans that must hold on every run
 INVARIANTS = (
@@ -51,6 +56,12 @@ INVARIANTS = (
     ("cold_warm_ablation", "penalty_measurable"),
     ("trace_replay", "fit_within_tolerance"),
     ("trace_replay", "bounded_memory"),
+    ("serving_knee", "knee_visible"),
+    ("serving_knee", "deterministic"),
+    ("serving_knee", "static_knee_violates_target"),
+    ("serving_knee", "slo_holds_target"),
+    ("serving_knee", "slo_cheaper_than_static"),
+    ("serving_knee", "replay_parity_ok"),
 )
 
 

@@ -524,6 +524,141 @@ def trace_record_replay() -> None:
          bounded_memory=resident <= 4096 < events_total)
 
 
+# -- PR6: open-loop serving knee + SLO autoscale (repro.traffic) -----------------
+
+def serving_knee() -> None:
+    """Open-loop serving on the virtual-time harness: sweep the offered
+    arrival rate over a fixed two-tenant mix (poisson chat + MMPP
+    bursts, heavy-tailed lengths) on a static pool and report the p99
+    TTFT *knee* — the rate where queueing takes over.  Then, at a
+    bursty operating point, hold a p99 TTFT SLO with
+    ``SLOAutoscalePolicy`` and compare provisioned cost-per-token
+    against a static pool sized at the SLO run's own peak (the
+    size-for-peak strawman).  The SLO run records to a spill-backed
+    ``TraceStore`` and is replayed (same capacity schedule is not
+    needed — the *static* comparator replays at its fixed width) with
+    arrivals honoured; makespan and cost must land within 1 %.
+    Everything is seeded: the whole row is bit-deterministic."""
+    from repro.traffic import (ArrivalModel, EngineModel, LengthModel,
+                               ResidencyConfig, SLOAutoscalePolicy,
+                               TenantSpec, generate_stream, scale_rate,
+                               serve_open_loop)
+    from repro.trace import TraceStore, extract_workload, replay
+
+    base = [
+        TenantSpec("chat",
+                   ArrivalModel(kind="poisson", rate=2.0),
+                   prompt_len=LengthModel(mean=100.0, sigma=0.9,
+                                          lo=8, hi=1024),
+                   decode_len=LengthModel(mean=48.0, sigma=0.7,
+                                          lo=4, hi=512)),
+        TenantSpec("burst",
+                   ArrivalModel(kind="mmpp", rate=0.5, burst_rate=6.0,
+                                calm_s=10.0, burst_s=3.0),
+                   prompt_len=LengthModel(kind="pareto", mean=160.0,
+                                          alpha=1.4, lo=8, hi=2048),
+                   decode_len=LengthModel(mean=32.0, sigma=0.8,
+                                          lo=4, hi=256)),
+    ]
+    engine = EngineModel(prefill_s_per_token=5e-4,
+                         decode_s_per_token=5e-3)
+    prov = ProviderModel.aws_lambda()
+    # memory-bounded host: overload must show up as *loss*, not just
+    # queueing (FaaS_Sim A1/A2 become observable past the knee)
+    rescfg = ResidencyConfig(memory_capacity_mb=48 * prov.memory_mb,
+                             max_per_tenant=32)
+    horizon, seed, static_cap = 60.0, 19, 8
+
+    def run(factor, **kw):
+        stream = generate_stream(scale_rate(base, factor),
+                                 horizon_s=horizon, seed=seed)
+        return serve_open_loop(stream, engine=engine, provider=prov,
+                               residency_cfg=rescfg, **kw)
+
+    t0 = time.monotonic()
+    factors = (1, 2, 4, 8, 16)
+    sweep = {f: run(f, capacity=static_cap) for f in factors}
+    derived = {}
+    for f, r in sweep.items():
+        derived[f"x{f}_p99_ms"] = round(r.ttft_p99_s * 1e3, 2)
+        derived[f"x{f}_loss_pct"] = round(100 * r.loss_rate, 2)
+    base_p99 = sweep[factors[0]].ttft_p99_s
+    knee = next((f for f in factors
+                 if sweep[f].ttft_p99_s > 2 * base_p99), factors[-1])
+    knee_visible = sweep[factors[-1]].ttft_p99_s > 3 * base_p99
+
+    # bit-determinism: the same seeded config, end to end, twice
+    deterministic = (run(knee, capacity=static_cap).as_dict()
+                     == sweep[knee].as_dict())
+
+    # SLO autoscale vs size-for-peak static, at the knee operating
+    # point.  The target must exceed the capacity-independent TTFT
+    # floor — cold start + the pareto tail's full prefill (~1.3 s
+    # here) + the burst-onset queueing no reactive policy can preempt:
+    # no autoscaler serves a 2048-token prompt's first token faster
+    # than its prefill.  2.0 s is deliverable; the knee-rate static
+    # pool violates it (the row asserts that), the SLO policy holds it.
+    target = 2.0
+    slo_trace = TraceStore(ring_size=4096)
+    slo = run(knee, capacity=2, trace=slo_trace,
+              autoscale=SLOAutoscalePolicy(
+                  min_capacity=2, max_capacity=256,
+                  target_p99_ttft_s=target, headroom=0.5,
+                  grow_cooldown_s=0.25, shrink_cooldown_s=2.0))
+    static_peak = run(knee, capacity=max(slo.peak_capacity, 3))
+    slo_holds = slo.ttft_p99_s <= target
+    slo_cheaper = (slo.provisioned_usd < static_peak.provisioned_usd
+                   and slo.cost_per_token_usd
+                   < static_peak.cost_per_token_usd)
+
+    # record -> replay: the static knee run reproduces open-loop
+    rep_trace = TraceStore(ring_size=4096)
+    recorded = run(knee, capacity=static_cap, trace=rep_trace)
+    wl = extract_workload(rep_trace)
+    assert wl.open_loop, "serving trace must carry arrival offsets"
+    replayed = replay(wl, max_concurrency=static_cap,
+                      invoke_overhead=0.0)
+    parity_pct = 100 * abs(replayed.makespan_s - recorded.makespan_s) \
+        / recorded.makespan_s
+    cost_parity_pct = 100 * abs(replayed.cost.total
+                                - recorded.serverless_usd) \
+        / max(recorded.serverless_usd, 1e-12)
+    slo_trace.close()
+    rep_trace.close()
+    wall = time.monotonic() - t0
+
+    emit("serving_knee", wall * 1e6,
+         **derived,
+         knee_factor=knee,
+         knee_rate_rps=round(2.5 * knee, 2),
+         knee_p50_ms=round(sweep[knee].ttft_p50_s * 1e3, 2),
+         knee_p99_ms=round(sweep[knee].ttft_p99_s * 1e3, 2),
+         knee_loss_pct=round(100 * sweep[knee].loss_rate, 2),
+         knee_cost_per_mtok_usd=round(
+             sweep[knee].cost_per_token_usd * 1e6, 4),
+         slo_target_ms=round(target * 1e3, 1),
+         slo_p99_ms=round(slo.ttft_p99_s * 1e3, 2),
+         static_peak_p99_ms=round(static_peak.ttft_p99_s * 1e3, 2),
+         slo_peak_capacity=slo.peak_capacity,
+         slo_resizes=slo.resizes,
+         slo_provisioned_usd=round(slo.provisioned_usd, 6),
+         static_provisioned_usd=round(static_peak.provisioned_usd, 6),
+         slo_cost_per_mtok_usd=round(slo.cost_per_token_usd * 1e6, 4),
+         static_cost_per_mtok_usd=round(
+             static_peak.cost_per_token_usd * 1e6, 4),
+         slo_savings_pct=round(
+             100 * (1 - slo.provisioned_usd
+                    / max(static_peak.provisioned_usd, 1e-12)), 1),
+         replay_parity_pct=round(parity_pct, 3),
+         cost_parity_pct=round(cost_parity_pct, 3),
+         knee_visible=knee_visible,
+         deterministic=deterministic,
+         static_knee_violates_target=sweep[knee].ttft_p99_s > target,
+         slo_holds_target=slo_holds,
+         slo_cheaper_than_static=slo_cheaper,
+         replay_parity_ok=parity_pct <= 1.0 and cost_parity_pct <= 1.0)
+
+
 # -- Batch fusion: run_irregular with vs without execute_batch -------------------
 
 def fig_batch_fusion() -> None:
@@ -611,6 +746,7 @@ BENCHES = {
     "cold_warm": cold_warm_ablation,
     "fig_batch_fusion": fig_batch_fusion,
     "trace_replay": trace_record_replay,
+    "serving_knee": serving_knee,
     "roofline": roofline_from_dryrun,
 }
 

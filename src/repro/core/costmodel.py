@@ -33,7 +33,7 @@ from .telemetry import EventLog
 __all__ = [
     "LambdaPrice", "VMPrice", "TPUPrice", "CostReport",
     "serverless_cost", "vm_cost", "emr_cluster_cost",
-    "price_performance",
+    "price_performance", "provisioned_cost", "SLOT_HOUR_USD",
 ]
 
 # -- Table 3 -----------------------------------------------------------------
@@ -146,6 +146,36 @@ def serverless_cost(
 def _ceil_to(x: float, g: float) -> float:
     import math
     return math.ceil(x / g) * g
+
+
+#: $/slot-hour for provisioned serving capacity: a c5.24xlarge vCPU's
+#: share of its on-demand price.  Used by the serving harness to bill
+#: the capacity *staircase* — what the operator pays for slots held up,
+#: busy or not — which is what an SLO autoscaler actually saves vs a
+#: statically peak-sized pool (per-invocation Eq. 4-5 billing is
+#: capacity-independent, so it cannot see the difference).
+SLOT_HOUR_USD = VM_PRICES["c5.24xlarge"] / 96
+
+
+def provisioned_cost(
+    capacity_series: Iterable,
+    *,
+    end_t: float,
+    slot_hourly_usd: float = SLOT_HOUR_USD,
+) -> CostReport:
+    """Integrate a ``(t, capacity)`` staircase up to ``end_t`` and bill
+    the slot-seconds at ``slot_hourly_usd``.
+
+    ``capacity_series`` is what every pool's timeline already exposes
+    (``pool.events.capacity_series()`` — the initial width announcement
+    plus every resize), so autoscaled and static runs are billed from
+    the same artifact.  Timestamps after ``end_t`` are clipped."""
+    series = [(t, c) for t, c in capacity_series if t <= end_t]
+    slot_seconds = 0.0
+    for i, (t, cap) in enumerate(series):
+        t_next = series[i + 1][0] if i + 1 < len(series) else end_t
+        slot_seconds += cap * max(0.0, min(t_next, end_t) - t)
+    return CostReport(client=slot_seconds / 3600.0 * slot_hourly_usd)
 
 
 def vm_cost(wall_time_s: float, vm: VMPrice,

@@ -130,10 +130,15 @@ class ExecutorStats:
         """Completion log, derived from the timeline."""
         return self.log.records
 
-    def on_submit(self, task_id: Optional[int] = None) -> None:
+    def on_submit(self, task_id: Optional[int] = None,
+                  parent: Optional[int] = None) -> None:
+        """``parent`` is the task id of the completion that spawned
+        this submit (``telemetry.PARENT_ROOT`` for seed/arrival
+        dispatches) — recorded on the timeline so replays recover the
+        dispatch DAG exactly instead of heuristically."""
         with self._lock:
             self.submitted += 1
-        self.log.emit(SUBMIT, task_id=task_id)
+        self.log.emit(SUBMIT, task_id=task_id, parent=parent)
 
     def on_cold_start(self, task_id: Optional[int] = None,
                       worker: Optional[str] = None) -> None:
@@ -418,7 +423,8 @@ class BaseExecutor(Pool):
 
     # -- public API (paper's ExecutorService surface) ----------------------
     def submit(self, fn: Callable[..., Any], *args: Any,
-               cost_hint: float = 1.0, **kwargs: Any) -> ElasticFuture:
+               cost_hint: float = 1.0, parent: Optional[int] = None,
+               **kwargs: Any) -> ElasticFuture:
         if fn is None:
             raise TypeError("task must not be None")  # Listing 1 line 8
         if self._shutdown:
@@ -430,7 +436,7 @@ class BaseExecutor(Pool):
         self._ensure_workers()
         task = Task(fn=fn, args=args, kwargs=kwargs, cost_hint=cost_hint)
         future = ElasticFuture(task)
-        self.stats.on_submit(task.task_id)
+        self.stats.on_submit(task.task_id, parent=parent)
         self._queue.put((task, future))
         return future
 

@@ -25,14 +25,16 @@ duplication safe; the first completion wins at the future level).
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterable, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 from .adaptive import TaskShape
 from .costmodel import CostReport, serverless_cost
 from .futures import CompletionQueue, ElasticFuture, TaskState
 from .pool import Pool
 from .provider import AutoscalePolicy
+from .telemetry import PARENT_ROOT
 
 __all__ = ["WorkSpec", "IrregularResult", "run_irregular"]
 
@@ -140,6 +142,7 @@ def run_irregular(
     speculative_deadline: Optional[float] = None,
     timeout: Optional[float] = None,
     batching: Optional[bool] = None,
+    arrivals: Optional[Iterable[Tuple[float, Any]]] = None,
 ) -> IrregularResult:
     """Drive ``spec`` over ``pool`` to completion.
 
@@ -187,6 +190,17 @@ def run_irregular(
                           pool wrapper additionally re-dispatches the
                           *remainder* of a straggling fused batch —
                           see ``repro.runtime.straggler``).
+    arrivals              open-loop mode: ``(t, item)`` pairs replacing
+                          ``spec.seed`` — each item is dispatched at
+                          virtual time ``t`` (the pool is run to that
+                          instant first), so idle gaps between arrivals
+                          survive on the timeline instead of being
+                          compressed into an all-at-once seed.  Requires
+                          a virtual-time pool (``run_until``); follow-up
+                          items from ``split`` still dispatch at their
+                          spawning completion, closed-loop.  This is how
+                          serving traces (requests arriving over time)
+                          replay exactly.
     """
     t0 = time.monotonic()
     shape = shape or spec.shape
@@ -199,23 +213,28 @@ def run_irregular(
     outstanding: Dict[ElasticFuture, _Dispatch] = {}
     n_dispatched = 0
 
-    def dispatch(item: Any, shp: TaskShape) -> None:
+    def dispatch(item: Any, shp: TaskShape,
+                 parent: Optional[int] = None) -> None:
         nonlocal n_dispatched
         f = pool.submit(spec.execute, item, shp,
-                        cost_hint=spec.cost_hint(item))
+                        cost_hint=spec.cost_hint(item), parent=parent)
         outstanding[f] = _Dispatch(item, shp, time.monotonic())
         cq.add(f)
         n_dispatched += 1
 
-    def dispatch_ready(items: List[Any], shp: TaskShape) -> None:
+    def dispatch_ready(items: List[Any], shp: TaskShape,
+                       parent: Optional[int] = None) -> None:
         """Issue a wave of ready items: fused through ``submit_batch``
         in idle-capacity-bounded chunks when batching, per item
         otherwise (small tiny-task dispatches are the per-invocation
-        overhead the fusion exists to amortize)."""
+        overhead the fusion exists to amortize).  ``parent`` is the
+        spawning completion's task id (``PARENT_ROOT`` for seeds),
+        stamped on the submit events so replays recover the dispatch
+        DAG exactly."""
         nonlocal n_dispatched
         if not batching or len(items) <= 1:
             for item in items:
-                dispatch(item, shp)
+                dispatch(item, shp, parent)
             return
         # fusing pools (local/sim) expose max_concurrency; decomposing
         # pools ignore the chunking, so the fallback width is moot there
@@ -237,7 +256,8 @@ def run_irregular(
                 lambda batch, _s=shp: spec.execute_batch(batch, _s),
                 chunk,
                 item_fn=lambda item, _s=shp: spec.execute(item, _s),
-                cost_hints=[spec.cost_hint(item) for item in chunk])
+                cost_hints=[spec.cost_hint(item) for item in chunk],
+                parent=parent)
             now = time.monotonic()
             for f, item in zip(futures, chunk):
                 outstanding[f] = _Dispatch(item, shp, now)
@@ -256,8 +276,17 @@ def run_irregular(
     vt0 = getattr(pool, "virtual_time_s", None) or 0.0
     ramp_t0: List[float] = []  # first-event timestamp, cached once
 
-    dispatch_ready(list(spec.seed(initial_shape or shape)),
-                   initial_shape or shape)
+    pending_arrivals: Optional[deque] = None
+    if arrivals is not None:
+        run_until = getattr(pool, "run_until", None)
+        if run_until is None:
+            raise ValueError(
+                f"{spec.name}: arrivals= needs a virtual-time pool "
+                f"exposing run_until (got {type(pool).__name__})")
+        pending_arrivals = deque(sorted(arrivals, key=lambda a: a[0]))
+    else:
+        dispatch_ready(list(spec.seed(initial_shape or shape)),
+                       initial_shape or shape, parent=PARENT_ROOT)
 
     deadline = None if timeout is None else t0 + timeout
     speculated = 0
@@ -320,7 +349,26 @@ def run_irregular(
                 speculated += 1
                 _speculate(pool, spec, fut, d)
 
-    while outstanding:
+    observe_completion = (getattr(autoscale, "observe_completion", None)
+                          if autoscale is not None else None)
+
+    while outstanding or pending_arrivals:
+        if pending_arrivals:
+            # release every arrival due before the next completion, at
+            # its exact virtual time; completions due first are pumped
+            # first (below) so children still dispatch at their
+            # spawning completion's instant
+            t_arr = pending_arrivals[0][0]
+            nxt = (pool.next_event_t()
+                   if hasattr(pool, "next_event_t") else None)
+            if not outstanding or nxt is None or t_arr <= nxt:
+                pool.run_until(t_arr)
+                while pending_arrivals and pending_arrivals[0][0] <= t_arr:
+                    _, item = pending_arrivals.popleft()
+                    dispatch(item, shape, PARENT_ROOT)
+                if autoscale is not None:
+                    apply_autoscale()
+                continue
         remaining = None if deadline is None else deadline - time.monotonic()
         if remaining is not None and remaining <= 0:
             raise TimeoutError(
@@ -345,7 +393,20 @@ def run_irregular(
         state = spec.reduce(state, f.result())
         if controller is not None:
             shape = controller.update(len(outstanding))
-        dispatch_ready(list(spec.split(f.result(), shape)), shape)
+        dispatch_ready(list(spec.split(f.result(), shape)), shape,
+                       parent=f._task.task_id)
+        if observe_completion is not None:
+            # latency-targeting policies (SLO autoscale) consume each
+            # completion's queue delay — this is what lets a recorded
+            # serving policy be re-tuned offline through trace replay
+            t = f._task
+            observe_completion(
+                queue_delay_s=max(0.0, (t.start_time or 0.0)
+                                  - (t.submit_time or 0.0)),
+                duration_s=max(0.0, (t.end_time or 0.0)
+                               - (t.start_time or 0.0)),
+                now=(pool_clock.now() if pool_clock is not None
+                     else time.monotonic()))
         if autoscale is not None:
             apply_autoscale()
 

@@ -132,6 +132,7 @@ class Pool(abc.ABC):
         *,
         item_fn: Optional[Callable[[Any], Any]] = None,
         cost_hints: Optional[Sequence[float]] = None,
+        parent: Optional[int] = None,
     ) -> List[ElasticFuture]:
         """Submit ``items`` as one logical batch; one future per item.
 
@@ -142,6 +143,8 @@ class Pool(abc.ABC):
         futures from its return value.  Backends without it decompose
         into per-item submissions of ``item_fn`` (default:
         ``batch_fn([item])[0]``), preserving exact per-task semantics.
+        ``parent`` stamps the submit events' dispatch-DAG parentage
+        (see ``telemetry.Event.parent``) on whichever path runs.
         """
         items = list(items)
         if not items:
@@ -160,7 +163,8 @@ class Pool(abc.ABC):
             try:
                 for item, h in zip(items, hints):
                     futures.append(self.submit(item_fn, item,
-                                               cost_hint=h))
+                                               cost_hint=h,
+                                               parent=parent))
             except BaseException:
                 # a mid-batch throttle/shutdown must not orphan the
                 # futures already submitted: cancel what never started
@@ -205,7 +209,8 @@ class Pool(abc.ABC):
             for c, r in zip(children, results):
                 c._set_result(r)
 
-        cf = self.submit(carrier, cost_hint=float(sum(hints)))
+        cf = self.submit(carrier, cost_hint=float(sum(hints)),
+                         parent=parent)
         cf.add_done_callback(fan_out)
         return children
 

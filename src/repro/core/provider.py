@@ -160,6 +160,7 @@ class ContainerFleet:
         self._ids = itertools.count()
         self.cold_starts = 0
         self.warm_hits = 0
+        self.evictions = 0
 
     def _prune(self, now: float) -> None:
         keep = self.model.keep_alive_s
@@ -179,6 +180,57 @@ class ContainerFleet:
     def release(self, container_id: int, now: float) -> None:
         with self._lock:
             self._idle.append((now, container_id))
+
+    # -- residency hooks (memory-bounded admission, repro.traffic) ---------
+    def try_acquire_warm(self, now: float) -> Optional[int]:
+        """A warm container or nothing — never provisions.  The
+        memory-bounded residency model separates the warm-hit path
+        (free) from cold provision (needs a memory grant), so it asks
+        for each explicitly instead of using :meth:`acquire`."""
+        with self._lock:
+            self._prune(now)
+            if self._idle:
+                _, cid = self._idle.pop()  # LIFO: warmest first
+                self.warm_hits += 1
+                return cid
+            return None
+
+    def oldest_idle_at(self, now: float) -> Optional[float]:
+        """Release timestamp of the longest-idle live container (the
+        idle-LRU eviction candidate), ``None`` when no idle container
+        survives keep-alive.  Non-destructive."""
+        keep = self.model.keep_alive_s
+        with self._lock:
+            live = [t for t, _ in self._idle if now - t <= keep]
+            return min(live) if live else None
+
+    def evict_oldest_idle(self, now: float) -> Optional[int]:
+        """Deallocate the longest-idle container (FaaS_Sim A1: evict
+        idle-LRU to free memory).  Busy containers — including ones
+        mid-cold-start — are never in the idle set, so they are
+        structurally unevictable (A4).  Returns the evicted id."""
+        with self._lock:
+            self._prune(now)
+            if not self._idle:
+                return None
+            _, cid = self._idle.pop(0)  # FIFO end: longest idle
+            self.evictions += 1
+            return cid
+
+    def prune_expired(self, now: float) -> int:
+        """Reclaim idle containers past keep-alive; returns how many —
+        the residency model frees their memory at this instant."""
+        with self._lock:
+            before = len(self._idle)
+            self._prune(now)
+            return before - len(self._idle)
+
+    def idle_ids(self, now: float) -> List[int]:
+        """Live idle container ids, longest-idle first (inspection)."""
+        keep = self.model.keep_alive_s
+        with self._lock:
+            return [cid for t, cid in sorted(self._idle)
+                    if now - t <= keep]
 
     def warm_count(self, now: float) -> int:
         """Idle containers still within keep-alive at ``now``.  A pure

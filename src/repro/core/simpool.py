@@ -169,7 +169,8 @@ class SimPool(Pool):
 
     # -- Pool contract -----------------------------------------------------
     def submit(self, fn: Callable[..., Any], *args: Any,
-               cost_hint: float = 1.0, **kwargs: Any) -> ElasticFuture:
+               cost_hint: float = 1.0, parent: Optional[int] = None,
+               **kwargs: Any) -> ElasticFuture:
         if fn is None:
             raise TypeError("task must not be None")
         if self._shutdown:
@@ -183,7 +184,7 @@ class SimPool(Pool):
         task = Task(fn=fn, args=args, kwargs=kwargs, cost_hint=cost_hint)
         task.submit_time = self.clock.now()
         future = SimFuture(task, self)
-        self.stats.on_submit(task.task_id)
+        self.stats.on_submit(task.task_id, parent=parent)
         # run the body now (exact results); only *time* is simulated
         task.attempts = 1
         try:
@@ -228,6 +229,27 @@ class SimPool(Pool):
             while self._pump_one():
                 pass
         self._shutdown = True
+
+    # -- open-loop driving -------------------------------------------------
+    def next_event_t(self) -> Optional[float]:
+        """Virtual timestamp of the next pending completion, ``None``
+        when nothing is outstanding — lets an open-loop driver decide
+        whether its next arrival lands before the next completion."""
+        return self._heap[0][0] if self._heap else None
+
+    def run_until(self, t: float) -> None:
+        """Pump every completion event up to virtual time ``t``, then
+        advance the clock to exactly ``t``.
+
+        This is the open-loop surface: a traffic driver submits each
+        request at its virtual *arrival* time by first running the pool
+        to that instant, so idle gaps between arrivals appear on the
+        timeline instead of being compressed away (the closed-loop
+        ``result()``/``CompletionQueue`` pumps only move time on
+        completions)."""
+        while self._heap and self._heap[0][0] <= t:
+            self._pump_one()
+        self.clock.advance_to(t)
 
     def snapshot(self) -> dict:
         snap = self.stats.snapshot()

@@ -53,7 +53,7 @@ from .futures import TaskRecord
 
 __all__ = [
     "Clock", "WallClock", "VirtualClock",
-    "Event", "EventLog", "EVENT_KINDS",
+    "Event", "EventLog", "EVENT_KINDS", "PARENT_ROOT",
     "SUBMIT", "COLD_START", "START", "REQUEUE", "COMPLETE",
     "CAPACITY_GROW", "CAPACITY_SHRINK",
 ]
@@ -68,6 +68,12 @@ CAPACITY_SHRINK = "capacity_shrink"
 
 EVENT_KINDS = (SUBMIT, COLD_START, START, REQUEUE, COMPLETE,
                CAPACITY_GROW, CAPACITY_SHRINK)
+
+#: ``Event.parent`` sentinel for an explicit root submit (no spawning
+#: completion).  ``parent=None`` means the recording predates parent
+#: tracking — consumers (trace replay) then fall back to the
+#: attributed-to-last-completion heuristic.
+PARENT_ROOT = -1
 
 _ANALYTICS_CLS = None
 
@@ -128,7 +134,10 @@ class VirtualClock(Clock):
 class Event:
     """One timeline entry.  Only the fields relevant to ``kind`` are
     set: ``record`` on ``complete``, ``capacity`` on ``capacity_*``,
-    ``task_id``/``worker`` on task-lifecycle kinds."""
+    ``task_id``/``worker`` on task-lifecycle kinds.  ``parent`` (on
+    ``submit``) records the task id of the completion that spawned this
+    dispatch — :data:`PARENT_ROOT` for seeds/arrivals with no spawning
+    completion, ``None`` when the emitter did not track parentage."""
 
     t: float
     kind: str
@@ -137,6 +146,7 @@ class Event:
     capacity: Optional[int] = None
     ok: Optional[bool] = None
     record: Optional[TaskRecord] = None
+    parent: Optional[int] = None
 
 
 class EventLog:
@@ -158,7 +168,8 @@ class EventLog:
     def emit(self, kind: str, *, t: Optional[float] = None,
              task_id: Optional[int] = None, worker: Optional[str] = None,
              capacity: Optional[int] = None, ok: Optional[bool] = None,
-             record: Optional[TaskRecord] = None) -> Event:
+             record: Optional[TaskRecord] = None,
+             parent: Optional[int] = None) -> Event:
         if kind not in EVENT_KINDS:
             raise ValueError(f"unknown event kind {kind!r}")
         with self._lock:
@@ -168,7 +179,7 @@ class EventLog:
             # fast path
             ev = Event(t=self.clock.now() if t is None else t, kind=kind,
                        task_id=task_id, worker=worker, capacity=capacity,
-                       ok=ok, record=record)
+                       ok=ok, record=record, parent=parent)
             self._events.append(ev)
             if self._analytics is not None:
                 self._analytics.observe(ev)

@@ -33,6 +33,7 @@ from ..core.adaptive import OccupancyController, TaskShape
 from ..core.characterization import characterize
 from ..core.executor import ExecutorStats
 from ..core.futures import TaskRecord
+from ..core.telemetry import PARENT_ROOT
 
 __all__ = ["Request", "BatcherConfig", "ElasticBatcher", "SimEngine"]
 
@@ -88,13 +89,17 @@ class SimEngine:
 class ElasticBatcher:
     """Continuous batching loop with the paper's occupancy controller."""
 
-    def __init__(self, engine, cfg: BatcherConfig):
+    def __init__(self, engine, cfg: BatcherConfig, *, trace=None,
+                 clock=None):
         self.engine = engine
         self.cfg = cfg
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * cfg.n_slots
         self.completed: List[Request] = []
-        self.stats = ExecutorStats()  # unified Pool stats surface
+        # unified Pool stats surface; ``trace`` adopts an external
+        # timeline (a spill-to-disk TraceStore records the serving run
+        # for the replay/what-if loop), ``clock`` stamps it
+        self.stats = ExecutorStats(clock=clock, log=trace)
         self.controller = OccupancyController(
             capacity=cfg.n_slots,
             init_shape=TaskShape(split_factor=max(
@@ -106,7 +111,10 @@ class ElasticBatcher:
 
     # -- ingress --------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.stats.on_submit()
+        # serving arrivals are roots of the dispatch DAG (nothing
+        # spawned them), and they carry their request id so a recorded
+        # timeline replays each request exactly
+        self.stats.on_submit(req.rid, parent=PARENT_ROOT)
         self.queue.append(req)
 
     def _admit(self) -> None:
@@ -115,7 +123,7 @@ class ElasticBatcher:
                 req = self.queue.pop(0)
                 req.slot = i
                 self.slots[i] = req
-                self.stats.on_start()
+                self.stats.on_start(req.rid, worker=f"slot{i}")
 
     # -- one scheduler round ---------------------------------------------------
     def step(self) -> None:
@@ -129,7 +137,7 @@ class ElasticBatcher:
         chunk = max(64, 4096 // max(1, self._shape.split_factor))
         burst = max(1, self._shape.iters)
 
-        # 1. advance至多 one prefill chunk per un-prefilled request
+        # 1. advance at most one prefill chunk per un-prefilled request
         for r in active:
             if r.prefilled < r.prompt_len:
                 take = min(chunk, r.prompt_len - r.prefilled)

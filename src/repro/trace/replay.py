@@ -11,13 +11,20 @@ on the virtual-time :class:`~repro.core.simpool.SimPool` under a
 GCF-like ramp", "the same run with EWMA autoscaling" — without
 re-running the algorithm.
 
-Reconstruction exploits the master-loop structure every recorded run
-shares (``run_irregular``): follow-up tasks are submitted *immediately
-after* the completion that spawned them, so on the timeline every
-``submit`` between completion *k* and completion *k+1* is a child of
-*k*'s task.  Seeds are the submits before the first completion.  That
-recovers the dispatch DAG exactly on virtual-time traces (and up to
-thread-interleaving jitter on wall-clock ones).  Task *body* durations
+Reconstruction prefers the **explicit parent ids** submit events carry
+since the traffic subsystem (``Event.parent``: the spawning
+completion's task id, ``PARENT_ROOT`` for seeds/arrivals) — exact on
+wall-clock and virtual traces alike.  Recordings that predate parent
+tracking fall back to the master-loop heuristic: follow-up tasks are
+submitted *immediately after* the completion that spawned them, so on
+the timeline every ``submit`` between completion *k* and completion
+*k+1* is a child of *k*'s task, and seeds are the submits before the
+first completion — exact on virtual-time traces, up to
+thread-interleaving jitter on wall-clock ones.  Root submit *times*
+are kept as arrival offsets: an open-loop recording (serving requests
+arriving over time) replays through ``run_irregular(arrivals=...)``,
+reproducing the idle gaps instead of compressing all roots into one
+seed wave.  Task *body* durations
 are the recorded durations minus the recording provider's cold/warm
 overhead, so replay under a new provider re-applies the new platform's
 overheads to clean bodies — replaying under the *same* provider **and
@@ -34,7 +41,8 @@ from typing import Any, Dict, Iterable, List, Optional, Union
 from ..core.irregular import IrregularResult, WorkSpec, run_irregular
 from ..core.provider import AutoscalePolicy, ProviderModel
 from ..core.simpool import SimPool
-from ..core.telemetry import COLD_START, COMPLETE, SUBMIT, Event, EventLog
+from ..core.telemetry import (COLD_START, COMPLETE, PARENT_ROOT, SUBMIT,
+                              Event, EventLog)
 from .store import iter_trace_events
 
 __all__ = ["ReplayTask", "ReplayWorkload", "extract_workload",
@@ -52,6 +60,9 @@ class ReplayTask:
     cold: bool = False
     attempts: int = 1
     children: List["ReplayTask"] = field(default_factory=list)
+    #: recorded submit offset from trace start (roots only; open-loop
+    #: replay re-arrives each root at this virtual time)
+    arrival_s: float = 0.0
 
 
 @dataclass
@@ -63,6 +74,17 @@ class ReplayWorkload:
     total_body_s: float
     recorded_makespan_s: float
     recorded_cold_starts: int = 0
+    #: True when the submit events carried explicit parent ids (exact
+    #: DAG recovery, no heuristic)
+    has_parents: bool = False
+
+    @property
+    def open_loop(self) -> bool:
+        """Roots arrived over time (a serving trace): replay honours
+        their recorded arrival offsets.  Batch recordings seed every
+        root at t~0, so this stays False and replay is closed-loop."""
+        return self.has_parents and any(r.arrival_s > 1e-9
+                                        for r in self.roots)
 
     def all_tasks(self) -> Iterable[ReplayTask]:
         stack = list(self.roots)
@@ -90,6 +112,8 @@ def extract_workload(trace: Union[EventLog, Iterable[Event]], *,
     nodes: Dict[int, ReplayTask] = {}
     children_of: Dict[Optional[int], List[int]] = {None: []}
     cold_ids = set()
+    submit_at: Dict[int, float] = {}
+    has_parents = False
     last_completed: Optional[int] = None
     t_first: Optional[float] = None
     t_last = 0.0
@@ -98,7 +122,15 @@ def extract_workload(trace: Union[EventLog, Iterable[Event]], *,
             t_first = ev.t
         t_last = ev.t
         if ev.kind == SUBMIT and ev.task_id is not None:
-            children_of.setdefault(last_completed, []).append(ev.task_id)
+            # explicit parent when recorded (exact DAG); the
+            # last-completed heuristic only for legacy events
+            if ev.parent is not None:
+                has_parents = True
+                key = None if ev.parent == PARENT_ROOT else ev.parent
+            else:
+                key = last_completed
+            children_of.setdefault(key, []).append(ev.task_id)
+            submit_at[ev.task_id] = ev.t
         elif ev.kind == COLD_START and ev.task_id is not None:
             cold_ids.add(ev.task_id)
         elif ev.kind == COMPLETE and ev.record is not None:
@@ -123,6 +155,9 @@ def extract_workload(trace: Union[EventLog, Iterable[Event]], *,
     for tid, node in nodes.items():
         node.children = resolve(tid)
     roots = resolve(None)
+    t0 = t_first if t_first is not None else 0.0
+    for r in roots:
+        r.arrival_s = max(0.0, submit_at.get(r.task_id, t0) - t0)
     return ReplayWorkload(
         roots=roots,
         n_tasks=len(nodes),
@@ -130,6 +165,7 @@ def extract_workload(trace: Union[EventLog, Iterable[Event]], *,
         recorded_makespan_s=(t_last - t_first) if t_first is not None
         else 0.0,
         recorded_cold_starts=len(cold_ids),
+        has_parents=has_parents,
     )
 
 
@@ -157,6 +193,7 @@ def replay(
     autoscale: Optional[AutoscalePolicy] = None,
     invoke_overhead: float = 0.0,
     trace: Optional[EventLog] = None,
+    honor_arrivals: Optional[bool] = None,
 ) -> IrregularResult:
     """Re-execute a recorded workload on ``SimPool`` under ``provider``
     / ``autoscale`` — the what-if knobs.  ``source`` is a workload from
@@ -168,16 +205,26 @@ def replay(
     recorded durations already (subtract it at extraction via
     ``extract_workload(overhead_s=...)`` if you want to re-model it
     here).  ``trace`` optionally records the replay itself
-    (store-to-store what-if chains)."""
+    (store-to-store what-if chains).  ``honor_arrivals`` controls
+    open-loop replay: by default a serving trace (``wl.open_loop``)
+    re-arrives each root at its recorded offset so idle gaps survive,
+    while batch traces seed all roots at t=0 exactly as before; pass an
+    explicit bool to force either mode."""
     if isinstance(source, ReplayWorkload):
         wl = source
     else:
         wl = extract_workload(source, provider=recorded_provider)
+    if honor_arrivals is None:
+        honor_arrivals = wl.open_loop
     pool = SimPool(max_concurrency=max_concurrency, provider=provider,
                    invoke_overhead=invoke_overhead,
                    duration_fn=lambda task, rt: rt.body_s,
                    trace=trace, name="replay-pool")
     try:
+        if honor_arrivals:
+            return run_irregular(
+                pool, replay_spec(wl), autoscale=autoscale,
+                arrivals=[(r.arrival_s, r) for r in wl.roots])
         return run_irregular(pool, replay_spec(wl), autoscale=autoscale)
     finally:
         pool.shutdown()

@@ -57,7 +57,7 @@ def iter_trace_events(trace) -> Iterable[Event]:
         return trace.events()
     return trace
 
-_EVENT_FIELDS = ("task_id", "worker", "capacity", "ok")
+_EVENT_FIELDS = ("task_id", "worker", "capacity", "ok", "parent")
 _RECORD_FIELDS = ("task_id", "worker", "submit_time", "start_time",
                   "end_time", "cost_hint", "remote", "attempts")
 
@@ -79,7 +79,8 @@ def event_from_dict(d: dict) -> Event:
         t=d["t"], kind=d["kind"],
         task_id=d.get("task_id"), worker=d.get("worker"),
         capacity=d.get("capacity"), ok=d.get("ok"),
-        record=TaskRecord(**rec) if rec is not None else None)
+        record=TaskRecord(**rec) if rec is not None else None,
+        parent=d.get("parent"))
 
 
 class TraceStore(EventLog):
@@ -125,7 +126,8 @@ class TraceStore(EventLog):
     def emit(self, kind: str, *, t: Optional[float] = None,
              task_id: Optional[int] = None, worker: Optional[str] = None,
              capacity: Optional[int] = None, ok: Optional[bool] = None,
-             record: Optional[TaskRecord] = None) -> Event:
+             record: Optional[TaskRecord] = None,
+             parent: Optional[int] = None) -> Event:
         if kind not in EVENT_KINDS:
             raise ValueError(f"unknown event kind {kind!r}")
         with self._lock:
@@ -136,7 +138,7 @@ class TraceStore(EventLog):
             # incremental analytics on its monotone fast path
             ev = Event(t=self.clock.now() if t is None else t, kind=kind,
                        task_id=task_id, worker=worker, capacity=capacity,
-                       ok=ok, record=record)
+                       ok=ok, record=record, parent=parent)
             line = json.dumps(event_to_dict(ev),
                               separators=(",", ":")) + "\n"
             if self._written % self.index_every == 0:

@@ -76,6 +76,90 @@ def test_batcher_prefill_covers_prompts():
     assert eng.prefill_tokens == sum(r.prompt_len for r in reqs)
 
 
+class _InstrumentedEngine(SimEngine):
+    """Records per-call arguments so step invariants can be asserted."""
+
+    def __init__(self):
+        super().__init__(c_prefill=0.0, c_decode=0.0)
+        self.prefill_calls = []
+        self.decode_batches = []
+
+    def prefill_chunk(self, tokens):
+        self.prefill_calls.append(tokens)
+        super().prefill_chunk(tokens)
+
+    def decode(self, n_active):
+        self.decode_batches.append(n_active)
+        super().decode(n_active)
+
+
+def test_batcher_admission_respects_slot_count():
+    """Invariant: at most ``n_slots`` requests occupy slots, the decode
+    batch never exceeds the slot count, and queued requests only enter
+    as slots free up."""
+    rng = np.random.RandomState(3)
+    eng = _InstrumentedEngine()
+    b = ElasticBatcher(eng, BatcherConfig(n_slots=3))
+    for r in _mk_requests(12, rng):
+        b.submit(r)
+    rounds = 0
+    while b.queue or any(b.slots):
+        b.step()
+        rounds += 1
+        assert sum(1 for s in b.slots if s is not None) <= 3
+        assert len(b.slots) == 3
+        assert rounds < 10_000
+    assert eng.decode_batches and max(eng.decode_batches) <= 3
+
+
+def test_batcher_prefill_chunks_bounded():
+    """Invariant: every prefill call is one chunk of at most the
+    controller's current split (static config -> static bound), and no
+    request prefills past its prompt."""
+    rng = np.random.RandomState(4)
+    eng = _InstrumentedEngine()
+    chunk = 128
+    b = ElasticBatcher(eng, BatcherConfig(n_slots=2, prefill_chunk=chunk,
+                                          adaptive=False))
+    reqs = _mk_requests(6, rng)
+    for r in reqs:
+        b.submit(r)
+    b.run()
+    assert eng.prefill_calls and max(eng.prefill_calls) <= chunk
+    assert all(r.prefilled == r.prompt_len for r in reqs)
+    assert all(r.generated == r.max_new_tokens for r in reqs)
+
+
+def test_batcher_stats_surface_matches_lifecycle():
+    """submitted == completed == n at drain; submit/start events carry
+    the request ids and slot workers; parent marks arrivals as roots."""
+    from repro.core.telemetry import (COMPLETE, PARENT_ROOT, START,
+                                      SUBMIT, EventLog)
+
+    rng = np.random.RandomState(5)
+    log = EventLog()
+    b = ElasticBatcher(SimEngine(c_prefill=0.0, c_decode=0.0),
+                       BatcherConfig(n_slots=4), trace=log)
+    reqs = _mk_requests(10, rng)
+    for r in reqs:
+        b.submit(r)
+    b.run()
+    snap = b.snapshot()
+    assert snap["submitted"] == snap["completed"] == 10
+    assert snap["active"] == 0
+    assert 1 <= snap["peak_concurrency"] <= 4
+    rids = {r.rid for r in reqs}
+    submits = log.events(SUBMIT)
+    assert {e.task_id for e in submits} == rids
+    assert all(e.parent == PARENT_ROOT for e in submits)
+    starts = log.events(START)
+    assert {e.task_id for e in starts} == rids
+    assert all(e.worker and e.worker.startswith("slot")
+               for e in starts)
+    assert {e.record.task_id for e in log.events(COMPLETE)} == rids
+    assert len(b.records) == 10
+
+
 def test_adaptive_no_worse_than_static_rounds():
     """The §5.2 controller should not lose to static settings on a
     heavy-tailed mix (it usually wins by keeping slots busy)."""

@@ -1,0 +1,432 @@
+"""repro.traffic: workload generation, A0-A5 residency, open-loop
+serving, SLO autoscale, and parent-exact trace replay."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.futures import TaskRecord
+from repro.core.provider import ProviderModel
+from repro.core.simpool import SimPool
+from repro.core.telemetry import (COMPLETE, PARENT_ROOT, SUBMIT, Event,
+                                  EventLog)
+from repro.trace.replay import extract_workload, replay
+from repro.traffic import (ArrivalModel, EngineModel, LengthModel,
+                           ResidencyConfig, ResidencyModel,
+                           SLOAutoscalePolicy, TenantSpec, TrafficRequest,
+                           generate_stream, load_stream, p_quantile,
+                           save_stream, scale_rate, serve_open_loop)
+from repro.traffic.residency import (LOST_BUSY, LOST_COLD_BLOCKED,
+                                     LOST_NO_MEMORY)
+
+TENANTS = [
+    TenantSpec("chat", ArrivalModel(kind="poisson", rate=2.0)),
+    TenantSpec("burst", ArrivalModel(kind="mmpp", rate=0.5,
+                                     burst_rate=8.0, calm_s=5.0,
+                                     burst_s=2.0),
+               prompt_len=LengthModel(kind="pareto", mean=200.0,
+                                      alpha=1.3, hi=4096)),
+]
+
+
+def _key(stream):
+    return [(r.rid, r.tenant, r.arrival_s, r.prompt_len, r.decode_len)
+            for r in stream]
+
+
+# -- workload generation -----------------------------------------------------
+
+def test_stream_bit_deterministic():
+    a = generate_stream(TENANTS, horizon_s=50.0, seed=7)
+    b = generate_stream(TENANTS, horizon_s=50.0, seed=7)
+    assert _key(a) == _key(b)
+    assert _key(a) != _key(generate_stream(TENANTS, horizon_s=50.0,
+                                           seed=8))
+
+
+def test_stream_sorted_and_rids_in_order():
+    s = generate_stream(TENANTS, horizon_s=50.0, seed=3)
+    assert [r.rid for r in s] == list(range(len(s)))
+    assert all(s[i].arrival_s <= s[i + 1].arrival_s
+               for i in range(len(s) - 1))
+    assert all(0.0 <= r.arrival_s < 50.0 for r in s)
+
+
+def test_adding_tenant_does_not_perturb_others():
+    """Per-tenant spawn keys: tenant 0's draws are independent of the
+    rest of the mix."""
+    solo = generate_stream(TENANTS[:1], horizon_s=40.0, seed=5)
+    both = generate_stream(TENANTS, horizon_s=40.0, seed=5)
+    chat = [(r.arrival_s, r.prompt_len, r.decode_len)
+            for r in both if r.tenant == "chat"]
+    assert chat == [(r.arrival_s, r.prompt_len, r.decode_len)
+                    for r in solo]
+
+
+def test_poisson_rate_roughly_matches():
+    s = generate_stream(
+        [TenantSpec("t", ArrivalModel(kind="poisson", rate=5.0))],
+        horizon_s=200.0, seed=0)
+    assert 600 <= len(s) <= 1400  # 1000 expected, very loose CI
+
+
+def test_trace_arrival_model():
+    am = ArrivalModel(kind="trace", times=(3.0, 1.0, 99.0, -1.0, 2.0))
+    import numpy as np
+    assert am.arrivals(10.0, np.random.default_rng(0)) == [1.0, 2.0, 3.0]
+    with pytest.raises(ValueError):
+        ArrivalModel(kind="nope").arrivals(1.0,
+                                           np.random.default_rng(0))
+
+
+def test_length_models_clip_and_tail():
+    import numpy as np
+    rng = np.random.default_rng(1)
+    ln = LengthModel(kind="lognormal", mean=64.0, sigma=1.0, lo=4,
+                     hi=512)
+    xs = [ln.sample(rng) for _ in range(500)]
+    assert all(4 <= x <= 512 for x in xs)
+    pr = LengthModel(kind="pareto", mean=100.0, alpha=1.3, lo=1,
+                     hi=100_000)
+    ys = sorted(pr.sample(rng) for _ in range(2000))
+    med = ys[len(ys) // 2]
+    assert sum(ys) / len(ys) > 1.5 * med  # heavy tail: mean >> median
+    assert 30 <= med <= 300  # scaled so the median sits near ``mean``
+    with pytest.raises(ValueError):
+        LengthModel(kind="nope").sample(rng)
+
+
+def test_stream_save_load_roundtrip(tmp_path):
+    s = generate_stream(TENANTS, horizon_s=30.0, seed=2)
+    p = str(tmp_path / "stream.jsonl")
+    assert save_stream(s, p) == len(s)
+    assert _key(load_stream(p)) == _key(s)
+
+
+def test_scale_rate_scales_offered_load():
+    lo = generate_stream(scale_rate(TENANTS, 1.0), horizon_s=100.0,
+                         seed=4)
+    hi = generate_stream(scale_rate(TENANTS, 4.0), horizon_s=100.0,
+                         seed=4)
+    assert 2.5 * len(lo) < len(hi) < 6.0 * len(lo)
+    tr = scale_rate([TenantSpec("t", ArrivalModel(kind="trace",
+                                                  times=(2.0, 4.0)))],
+                    2.0)
+    assert tr[0].arrival.times == (1.0, 2.0)
+
+
+# -- residency: FaaS_Sim A0-A5 ----------------------------------------------
+
+PROV = ProviderModel.aws_lambda(keep_alive_s=10.0)
+MB = float(PROV.memory_mb)
+
+
+def test_a0_memory_starts_empty():
+    m = ResidencyModel(PROV, ResidencyConfig(memory_capacity_mb=4 * MB))
+    assert m.resident_mb(0.0) == 0.0 and not m.fleets
+
+
+def test_a5_overheads_warm_vs_cold():
+    m = ResidencyModel(PROV, ResidencyConfig())
+    cold = m.admit("t", 0.0)
+    assert cold.kind == "cold"
+    assert cold.overhead_s == pytest.approx(PROV.warm_overhead_s
+                                            + PROV.cold_start_s)
+    m.release("t", cold.cid, 1.0)
+    warm = m.admit("t", 1.5)
+    assert warm.kind == "warm" and warm.cid == cold.cid
+    assert warm.overhead_s == pytest.approx(PROV.warm_overhead_s)
+
+
+def test_a2_a3_per_tenant_cap():
+    m = ResidencyModel(PROV, ResidencyConfig(max_per_tenant=1))
+    a = m.admit("t", 0.0)
+    assert a.kind == "cold"
+    # during the cold window: lost as cold_blocked (A3)
+    blocked = m.admit("t", 0.1)
+    assert blocked.lost and blocked.reason == LOST_COLD_BLOCKED
+    # after the cold window but still busy: plain busy loss (A2)
+    busy = m.admit("t", PROV.cold_start_s + 1.0)
+    assert busy.lost and busy.reason == LOST_BUSY
+    m.release("t", a.cid, 2.0)
+    assert m.admit("t", 2.5).kind == "warm"
+
+
+def test_a1_evicts_longest_idle_across_tenants():
+    m = ResidencyModel(PROV, ResidencyConfig(memory_capacity_mb=2 * MB))
+    a = m.admit("a", 0.0)
+    b = m.admit("b", 0.5)
+    m.release("a", a.cid, 1.0)   # a idle since 1.0 (longest)
+    m.release("b", b.cid, 2.0)   # b idle since 2.0
+    c = m.admit("c", 3.0)        # needs room: evict a's container
+    assert c.kind == "cold"
+    assert m.fleets["a"].evictions == 1
+    assert m.fleets["b"].evictions == 0
+    # b's container survives and is still warm for b
+    assert m.admit("b", 3.5).kind == "warm"
+
+
+def test_a1_no_idle_means_lost():
+    m = ResidencyModel(PROV, ResidencyConfig(memory_capacity_mb=2 * MB))
+    m.admit("a", 0.0)
+    m.admit("b", 0.0)
+    lost = m.admit("c", 0.1)   # both resident containers busy (A4)
+    assert lost.lost and lost.reason == LOST_NO_MEMORY
+
+
+def test_a4_busy_and_cold_containers_unevictable():
+    m = ResidencyModel(PROV, ResidencyConfig(memory_capacity_mb=MB))
+    a = m.admit("a", 0.0)      # cold, busy: holds all memory
+    assert not a.lost
+    lost = m.admit("b", 0.05)  # mid-cold-start; cannot be reclaimed
+    assert lost.lost and lost.reason == LOST_NO_MEMORY
+    assert m.fleets["a"].idle_ids(0.05) == []
+
+
+def test_keep_alive_expiry_frees_memory():
+    m = ResidencyModel(PROV, ResidencyConfig(memory_capacity_mb=MB))
+    a = m.admit("a", 0.0)
+    m.release("a", a.cid, 1.0)
+    # within keep-alive the idle container is evicted for tenant b ...
+    assert m.admit("b", 2.0).kind == "cold"
+    m2 = ResidencyModel(PROV, ResidencyConfig(memory_capacity_mb=MB))
+    a2 = m2.admit("a", 0.0)
+    m2.release("a", a2.cid, 1.0)
+    # ... past keep-alive it expired on its own (no eviction needed)
+    assert m2.admit("b", 1.0 + PROV.keep_alive_s + 1.0).kind == "cold"
+    assert m2.fleets["a"].evictions == 0
+
+
+@settings(max_examples=15)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 1),
+                          st.integers(1, 50)),
+                min_size=1, max_size=60),
+       st.integers(2, 5))
+def test_residency_invariants_hold_under_random_ops(ops, cap_containers):
+    """Property: under any admit/release interleaving the memory bound
+    (A1), non-negative busy counts, and busy-not-idle (A4) all hold."""
+    cfg = ResidencyConfig(memory_capacity_mb=cap_containers * MB)
+    m = ResidencyModel(PROV, cfg)
+    tenants = ["t0", "t1", "t2"]
+    outstanding = []   # (tenant, cid)
+    now, n_admit_calls = 0.0, 0
+    for tenant_i, do_release, dt in ops:
+        now += dt / 10.0
+        if do_release and outstanding:
+            t, cid = outstanding.pop(0)
+            m.release(t, cid, now)
+        else:
+            n_admit_calls += 1
+            adm = m.admit(tenants[tenant_i], now)
+            if not adm.lost:
+                outstanding.append((adm.tenant, adm.cid))
+        # invariants after every op
+        assert m.resident_mb(now) <= cfg.memory_capacity_mb + 1e-9
+        assert m.busy_count() == len(outstanding)
+        for t, f in m.fleets.items():
+            busy_cids = {cid for tt, cid in outstanding if tt == t}
+            assert busy_cids.isdisjoint(set(f.idle_ids(now)))
+    snap = m.snapshot(now)
+    # every admit call is accounted for exactly once
+    assert (snap["admitted_warm"] + snap["admitted_cold"]
+            + sum(snap["lost"].values())) == n_admit_calls
+    assert snap["busy"] == len(outstanding)
+
+
+# -- open-loop serving harness ----------------------------------------------
+
+ENGINE = EngineModel(prefill_s_per_token=5e-4, decode_s_per_token=5e-3)
+
+
+def _mini_stream(factor=1.0, horizon=20.0, seed=11):
+    return generate_stream(scale_rate(TENANTS, factor),
+                           horizon_s=horizon, seed=seed)
+
+
+def test_serve_open_loop_deterministic():
+    a = serve_open_loop(_mini_stream(), engine=ENGINE, capacity=4)
+    b = serve_open_loop(_mini_stream(), engine=ENGINE, capacity=4)
+    assert a.as_dict() == b.as_dict()
+    assert a.completed + sum(a.lost.values()) == a.n_requests
+    assert a.makespan_s > 0 and a.provisioned_usd > 0
+
+
+def test_serve_open_loop_preserves_idle_gaps():
+    """Open loop: the makespan tracks the arrival horizon, not the
+    (much smaller) total service time."""
+    stream = _mini_stream(horizon=30.0)
+    rep = serve_open_loop(stream, engine=ENGINE, capacity=64)
+    total_service = sum(r.service_s for r in stream)
+    assert rep.makespan_s > max(r.arrival_s for r in stream) - 1.0
+    assert rep.makespan_s > 2 * total_service / 64
+
+
+def test_loss_under_overload():
+    rep = serve_open_loop(
+        _mini_stream(factor=8.0), engine=ENGINE,
+        residency_cfg=ResidencyConfig(memory_capacity_mb=8 * MB,
+                                      max_per_tenant=4),
+        capacity=4)
+    assert rep.loss_rate > 0.05
+    assert rep.completed + sum(rep.lost.values()) == rep.n_requests
+
+
+def test_knee_p99_rises_with_offered_load():
+    lo = serve_open_loop(_mini_stream(1.0, horizon=40.0), engine=ENGINE,
+                         capacity=6)
+    hi = serve_open_loop(_mini_stream(8.0, horizon=40.0), engine=ENGINE,
+                         capacity=6)
+    assert hi.ttft_p99_s > 1.5 * lo.ttft_p99_s
+
+
+def test_slo_autoscale_holds_target_cheaper_than_static_peak():
+    stream = _mini_stream(4.0, horizon=40.0)
+    target = 2.5
+    slo = serve_open_loop(
+        stream, engine=ENGINE, capacity=2,
+        autoscale=SLOAutoscalePolicy(min_capacity=2, max_capacity=128,
+                                     target_p99_ttft_s=target,
+                                     grow_cooldown_s=0.25,
+                                     shrink_cooldown_s=2.0))
+    static = serve_open_loop(stream, engine=ENGINE,
+                             capacity=max(slo.peak_capacity, 3))
+    assert slo.resizes > 0
+    assert slo.ttft_p99_s <= target
+    assert slo.provisioned_usd < static.provisioned_usd
+    assert slo.cost_per_token_usd < static.cost_per_token_usd
+
+
+def test_slo_policy_defers_then_reacts():
+    pol = SLOAutoscalePolicy(min_capacity=1, max_capacity=64,
+                             target_p99_ttft_s=1.0, min_observations=4)
+    # too few observations: inherited pressure behavior (pending grows)
+    assert pol.decide(pending=5, idle=0, capacity=4, now=0.0) > 4
+    for t in (3.0, 3.1, 3.2, 3.3):
+        pol.observe_ttft(t, now=0.0)
+    grown = pol.decide(pending=2, idle=0, capacity=4, now=1.0)
+    assert grown > 4  # p99 over target -> grow
+    pol2 = SLOAutoscalePolicy(min_capacity=1, max_capacity=64,
+                              target_p99_ttft_s=10.0,
+                              min_observations=4)
+    for t in (0.1, 0.1, 0.1, 0.2):
+        pol2.observe_ttft(t, now=0.0)
+    # comfortably inside the SLO with idle surplus: give capacity back
+    assert pol2.decide(pending=0, idle=8, capacity=10, now=1.0) < 10
+
+
+def test_p_quantile_order_statistic():
+    assert p_quantile([], 0.99) == 0.0
+    assert p_quantile([5.0], 0.5) == 5.0
+    xs = list(range(1, 101))
+    assert p_quantile(xs, 0.99) == 99
+    assert p_quantile(xs, 0.50) == 50
+
+
+# -- serving trace -> open-loop replay ---------------------------------------
+
+def test_serving_trace_replays_open_loop_exactly():
+    stream = _mini_stream(1.0, horizon=25.0)
+    log = EventLog()
+    rep = serve_open_loop(stream, engine=ENGINE, capacity=8, trace=log)
+    wl = extract_workload(log)
+    assert wl.has_parents and wl.open_loop
+    assert wl.n_tasks == rep.completed
+    assert max(r.arrival_s for r in wl.roots) > 1.0
+    res = replay(wl, max_concurrency=8, invoke_overhead=0.0)
+    assert abs(res.makespan_s - rep.makespan_s) \
+        <= 0.01 * rep.makespan_s
+    # forcing closed-loop compresses the idle gaps away
+    closed = replay(wl, max_concurrency=8, invoke_overhead=0.0,
+                    honor_arrivals=False)
+    assert closed.makespan_s < 0.5 * res.makespan_s
+
+
+def _ev(t, kind, tid=None, parent=None, rec=None):
+    return Event(t=t, kind=kind, task_id=tid, parent=parent, record=rec)
+
+
+def _done(t0, t1, tid):
+    return TaskRecord(task_id=tid, worker="w", submit_time=t0,
+                      start_time=t0, end_time=t1, cost_hint=1.0,
+                      remote=True)
+
+
+def test_explicit_parents_beat_heuristic_attribution():
+    """Child submitted *after an unrelated completion*: the heuristic
+    would hang it under task 2; the recorded parent id says task 1."""
+    evs = [
+        _ev(0.0, SUBMIT, 1, parent=PARENT_ROOT),
+        _ev(0.0, SUBMIT, 2, parent=PARENT_ROOT),
+        _ev(1.0, COMPLETE, 1, rec=_done(0.0, 1.0, 1)),
+        _ev(2.0, COMPLETE, 2, rec=_done(0.0, 2.0, 2)),
+        _ev(2.1, SUBMIT, 3, parent=1),       # child of 1, not of 2
+        _ev(3.0, COMPLETE, 3, rec=_done(2.1, 3.0, 3)),
+    ]
+    wl = extract_workload(evs)
+    assert wl.has_parents
+    by_id = {t.task_id: t for t in wl.all_tasks()}
+    assert [c.task_id for c in by_id[1].children] == [3]
+    assert by_id[2].children == []
+    assert sorted(r.task_id for r in wl.roots) == [1, 2]
+
+
+def test_legacy_traces_fall_back_to_heuristic():
+    evs = [
+        _ev(0.0, SUBMIT, 1),
+        _ev(1.0, COMPLETE, 1, rec=_done(0.0, 1.0, 1)),
+        _ev(1.0, SUBMIT, 2),                 # heuristic: child of 1
+        _ev(2.0, COMPLETE, 2, rec=_done(1.0, 2.0, 2)),
+    ]
+    wl = extract_workload(evs)
+    assert not wl.has_parents and not wl.open_loop
+    by_id = {t.task_id: t for t in wl.all_tasks()}
+    assert [c.task_id for c in by_id[1].children] == [2]
+    assert [r.task_id for r in wl.roots] == [1]
+
+
+def test_run_irregular_records_parent_ids():
+    from repro.core.irregular import WorkSpec, run_irregular
+
+    spec = WorkSpec(
+        name="fanout",
+        execute=lambda item, shape: item,
+        seed=lambda shape: [1, 2],
+        split=lambda result, shape: ([result * 10]
+                                     if result < 10 else []),
+        reduce=lambda s, r: s + 1, init=lambda: 0)
+    pool = SimPool(max_concurrency=4, invoke_overhead=1e-3)
+    run_irregular(pool, spec)
+    submits = pool.events.events(SUBMIT)
+    assert all(e.parent is not None for e in submits)
+    roots = [e for e in submits if e.parent == PARENT_ROOT]
+    children = [e for e in submits if e.parent >= 0]
+    assert len(roots) == 2 and len(children) == 2
+    pool.shutdown()
+
+
+def test_run_irregular_arrivals_requires_run_until():
+    from repro.core.irregular import WorkSpec, run_irregular
+    from repro.core import make_pool
+
+    spec = WorkSpec(name="x", execute=lambda i, s: i,
+                    seed=lambda s: [], split=lambda r, s: [],
+                    reduce=lambda s, r: s, init=lambda: 0)
+    with make_pool("local", max_concurrency=1) as pool:
+        with pytest.raises(ValueError):
+            run_irregular(pool, spec, arrivals=[(0.0, 1)])
+
+
+def test_run_irregular_open_loop_arrivals():
+    from repro.core.irregular import WorkSpec, run_irregular
+
+    spec = WorkSpec(name="arrive", execute=lambda i, s: i,
+                    seed=lambda s: [], split=lambda r, s: [],
+                    reduce=lambda s, r: s + 1, init=lambda: 0)
+    pool = SimPool(max_concurrency=2, invoke_overhead=0.0,
+                   duration_fn=lambda task, r: 0.5)
+    res = run_irregular(pool, spec,
+                        arrivals=[(0.0, 1), (5.0, 2), (10.0, 3)])
+    assert res.output == 3
+    # idle gaps survive: makespan ~ last arrival + service
+    assert res.makespan_s >= 10.0
+    pool.shutdown()

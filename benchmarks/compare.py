@@ -29,6 +29,8 @@ import sys
 DRIFT_TOL = 0.25
 #: cross-PR tolerance before a regression is flagged
 REGRESSION_TOL = 0.15
+#: wall-clock throughput keys are runner-sensitive — gate loosely
+WALL_TOL = 0.6
 #: (row, derived key, direction) — direction "up" = bigger is worse
 CROSS_PR_KEYS = (
     ("cost_performance_sim", "ppr_serverless", "down"),
@@ -50,6 +52,12 @@ DRIFT_KEYS = (
     ("serving_knee", "slo_provisioned_usd"),
     ("serving_knee", "slo_savings_pct"),
 )
+#: wall-clock keys (real time, not virtual) gated at WALL_TOL — catches
+#: order-of-magnitude master-loop regressions without flaking on noise
+WALL_DRIFT_KEYS = (
+    ("master_throughput", "tasks_per_s_settled"),
+    ("master_throughput", "speedup_8x"),
+)
 #: structural booleans that must hold on every run
 INVARIANTS = (
     ("cost_performance_sim", "serverless_beats_vm"),
@@ -62,6 +70,8 @@ INVARIANTS = (
     ("serving_knee", "slo_holds_target"),
     ("serving_knee", "slo_cheaper_than_static"),
     ("serving_knee", "replay_parity_ok"),
+    ("master_throughput", "master_scaling_ok"),
+    ("master_throughput", "identical_outputs"),
 )
 
 
@@ -107,6 +117,21 @@ def main(argv=None) -> int:
                 failures.append(
                     f"{row}.{key} drifted {drift:.0%} vs baseline "
                     f"({b} -> {c}); regenerate intentionally or fix")
+        for row, key in WALL_DRIFT_KEYS:
+            if row not in cur or row not in base:
+                continue
+            c, b = cur[row].get(key), base[row].get(key)
+            if c is None or b is None:
+                continue
+            # one-sided: only a *drop* in throughput/speedup fails
+            drop = (b - c) / max(abs(b), 1e-9)
+            status = "FAIL" if drop > WALL_TOL else "ok"
+            print(f"[drift:wall] {row}.{key}: baseline {b}, current {c} "
+                  f"({drop:+.0%} drop, {status})")
+            if drop > WALL_TOL:
+                failures.append(
+                    f"{row}.{key} fell {drop:.0%} vs baseline "
+                    f"({b} -> {c}); master-loop throughput regression")
 
     if args.prev:
         prev, prev_us = _load(args.prev)

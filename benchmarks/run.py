@@ -659,6 +659,105 @@ def serving_knee() -> None:
          replay_parity_ok=parity_pct <= 1.0 and cost_parity_pct <= 1.0)
 
 
+# -- PR7: sharded master throughput ----------------------------------------------
+
+def master_throughput() -> None:
+    """Tasks/s *settled by the master* on a ~10^6-task sim frontier at
+    ``shards`` ∈ {1, 4, 8}.
+
+    The workload is a deterministic synthetic tree (hash-driven fanout,
+    ~1.4M tasks) whose bodies are free — virtual time, echo execute —
+    so the only cost is the master loop itself: future construction,
+    trace emission, completion delivery, reduction.  ``shards=1`` is
+    the legacy per-task loop (one SimFuture + one completion record +
+    one trace event triple per task); ``shards=K`` runs the sharded
+    driver with fused gather carriers and batched ``drain()`` delivery.
+    The row asserts the PR's two gates: ≥4× settled throughput at
+    ``shards=8`` and bit-identical outputs for shards=1 vs shards=8 on
+    the real specs (UTS / Mariani-Silver / BC)."""
+    from repro.trace import ShardedTraceStore, TraceStore
+
+    ROOTS, DEPTH, MOD = 64, 13, 5
+
+    def split(result, shape):
+        nid, d = result
+        if d >= DEPTH:
+            return []
+        base = nid * MOD
+        return [((base + k) & 0x7FFFFFFFFFFFFFFF, d + 1)
+                for k in range((nid * 2654435761 + d * 40503) % MOD)]
+
+    from repro.core import WorkSpec
+    spec = WorkSpec(
+        name="synthetic-tree",
+        seed=lambda shape=None: [(r, 0) for r in range(ROOTS)],
+        execute=lambda item, shape: item,
+        execute_batch=lambda items, shape: list(items),
+        split=split,
+        reduce=lambda total, r: total + 1,
+        init=lambda: 0,
+        finalize=lambda t: t,
+        merge=lambda a, b: a + b,
+    )
+
+    def drive(shards):
+        trace = (TraceStore(ring_size=4096) if shards == 1
+                 else ShardedTraceStore(shards, ring_size=4096))
+        with make_pool("sim", max_concurrency=1024, trace=trace) as pool:
+            t0 = time.monotonic()
+            r = run_irregular(pool, spec, batching=True,
+                              shards=None if shards == 1 else shards)
+            wall = time.monotonic() - t0
+        trace.close()
+        return r, wall
+
+    outs, rates, derived = {}, {}, {}
+    for k in (1, 4, 8):
+        r, wall = drive(k)
+        outs[k] = r.output
+        rates[k] = r.tasks / wall
+        derived[f"tasks_per_s_{k}"] = round(rates[k], 0)
+        derived[f"wall_{k}_s"] = round(wall, 2)
+    assert outs[1] == outs[4] == outs[8]
+
+    # bit-identity on the real specs (small scale; BC per-task — fused
+    # BC partials legitimately depend on chunk grouping)
+    ident = {}
+    for name, s, batching in (
+            ("uts", uts_spec(UTSParams(seed=19, b0=4.0, max_depth=7,
+                                       chunk=64)), True),
+            ("ms", ms_spec(MSParams(width=128, height=128, max_dwell=64,
+                                    initial_subdivision=4, max_depth=3)),
+             True),
+            ("bc", bc_spec(RMATParams(scale=6, edge_factor=4, seed=7),
+                           n_tasks=16, regenerate_graph=True), False)):
+        res = {}
+        for k in (1, 8):
+            with make_pool("sim", max_concurrency=64) as pool:
+                res[k] = run_irregular(pool, s, batching=batching,
+                                       shards=None if k == 1 else k
+                                       ).output
+        if name == "ms":
+            ident[name] = bool(np.array_equal(res[1]["image"],
+                                              res[8]["image"]))
+        elif name == "bc":
+            ident[name] = bool(np.array_equal(res[1], res[8]))
+        else:
+            ident[name] = res[1] == res[8]
+
+    speedup_8 = rates[8] / rates[1]
+    emit("master_throughput", 1e6 / rates[8],
+         tasks_total=outs[1],
+         tasks_per_s_settled=round(rates[8], 0),
+         **derived,
+         speedup_4x=round(rates[4] / rates[1], 2),
+         speedup_8x=round(speedup_8, 2),
+         master_scaling_ok=speedup_8 >= 4.0,
+         identical_uts=ident["uts"], identical_ms=ident["ms"],
+         identical_bc=ident["bc"],
+         identical_outputs=all(ident.values()))
+
+
 # -- Batch fusion: run_irregular with vs without execute_batch -------------------
 
 def fig_batch_fusion() -> None:
@@ -745,6 +844,7 @@ BENCHES = {
     "cost_perf_sim": cost_performance_sim,
     "cold_warm": cold_warm_ablation,
     "fig_batch_fusion": fig_batch_fusion,
+    "master_throughput": master_throughput,
     "trace_replay": trace_record_replay,
     "serving_knee": serving_knee,
     "roofline": roofline_from_dryrun,

@@ -195,28 +195,43 @@ def bc_spec(
                 np.array_split(np.arange(n, dtype=np.int32), n_tasks)
                 if len(block)]
 
-    def execute(block: np.ndarray, shape: TaskShape) -> np.ndarray:
-        return _bc_task(p, block, shipped)
+    def execute(block: np.ndarray,
+                shape: TaskShape) -> Tuple[int, np.ndarray]:
+        # keyed contribution: (first source id, partial map).  Floating
+        # sums are order-sensitive, so partials are collected keyed and
+        # summed in canonical key order by ``finalize`` — the final
+        # betweenness is then bit-identical no matter which master
+        # shard or completion order produced each partial.
+        return int(block[0]), _bc_task(p, block, shipped)
 
     def execute_batch(blocks: List[np.ndarray],
-                      shape: TaskShape) -> List[np.ndarray]:
+                      shape: TaskShape) -> List[Tuple[int, np.ndarray]]:
         """Fused task body: the queued source blocks are stacked into
         one ``bc_batch`` invocation (one forward/backward sweep over the
         union of sources).  The summed dependency map lands on the first
-        slot; ``reduce`` is a plain sum, so the final betweenness equals
-        the per-task path up to float summation order."""
+        slot keyed by the first block; the remaining slots carry exact
+        zero contributions under their own keys."""
         sources = np.concatenate([np.asarray(b) for b in blocks])
         partial = _bc_task(p, sources, shipped)
-        return ([partial]
-                + [np.zeros(n, partial.dtype)] * (len(blocks) - 1))
+        return ([(int(blocks[0][0]), partial)]
+                + [(int(b[0]), np.zeros(n, partial.dtype))
+                   for b in blocks[1:]])
+
+    def finalize(parts: List[Tuple[int, np.ndarray]]) -> np.ndarray:
+        out = np.zeros(n, np.float64)
+        for _, partial in sorted(parts, key=lambda kp: kp[0]):
+            out += partial
+        return out
 
     return WorkSpec(
         name="betweenness_centrality",
         execute=execute,
         execute_batch=execute_batch,
         seed=seed,
-        reduce=lambda total, partial: total + partial,
-        init=lambda: np.zeros(n, np.float64),
+        reduce=lambda parts, keyed: parts + [keyed],
+        init=list,
+        finalize=finalize,
+        merge=lambda a, b: a + b,
         cost_hint=lambda block: float(len(block)),
     )
 

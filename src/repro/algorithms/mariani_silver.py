@@ -232,6 +232,14 @@ def ms_spec(p: MSParams) -> WorkSpec:
             state["evaluated"] += r.w * r.h
         return state
 
+    def merge(a: Dict[str, Any], b: Dict[str, Any]) -> Dict[str, Any]:
+        # every rectangle lands on exactly one shard and pixel writes
+        # are disjoint, so shard images sum exactly (int32 on zeros) —
+        # sharded renders are bit-identical to the single master
+        return {"image": a["image"] + b["image"],
+                "filled": a["filled"] + b["filled"],
+                "evaluated": a["evaluated"] + b["evaluated"]}
+
     return WorkSpec(
         name="mariani_silver",
         execute=execute,
@@ -240,6 +248,7 @@ def ms_spec(p: MSParams) -> WorkSpec:
         split=split,
         reduce=reduce,
         init=init,
+        merge=merge,
         cost_hint=lambda rect: float(rect.w * rect.h),
     )
 

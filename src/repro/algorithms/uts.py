@@ -240,6 +240,9 @@ def uts_spec(params: UTSParams) -> WorkSpec:
         split=split,
         reduce=lambda total, result: total + result[0],
         init=lambda: 0,
+        # int node counts: exact under any grouping, so sharded runs
+        # (shards=K) are bit-identical to the single master
+        merge=lambda a, b: a + b,
         cost_hint=lambda bag: float(bag.size),
         shape=TaskShape(split_factor=8, iters=50_000),
     )

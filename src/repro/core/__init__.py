@@ -22,7 +22,8 @@ from .futures import (CompletionQueue, ElasticFuture, Task, TaskRecord,
                       TaskState)
 from .telemetry import (Clock, Event, EventLog, VirtualClock, WallClock)
 from .provider import AutoscalePolicy, ContainerFleet, ProviderModel
-from .pool import Pool, make_pool, register_pool, registered_pools
+from .pool import (Pool, ShardView, make_pool, register_pool,
+                   registered_pools)
 from .executor import (
     BaseExecutor,
     ConcurrencyTracker,
@@ -56,7 +57,8 @@ from .characterization import (
 )
 
 __all__ = [
-    "Pool", "make_pool", "register_pool", "registered_pools",
+    "Pool", "ShardView", "make_pool", "register_pool",
+    "registered_pools",
     "WorkSpec", "run_irregular", "IrregularResult",
     "ProviderModel", "AutoscalePolicy", "ContainerFleet",
     "Clock", "WallClock", "VirtualClock", "Event", "EventLog",

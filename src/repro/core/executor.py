@@ -208,7 +208,13 @@ _RETIRE = object()
 
 
 class BaseExecutor(Pool):
-    """Common machinery: worker threads pulling from a bounded queue."""
+    """Common machinery: worker threads pulling from a bounded queue.
+
+    ``shard_views(K)`` (inherited) slices this ONE pool for the sharded
+    driver: all K views submit into the same queue, the same rate
+    limiter, and — when a ``ProviderModel`` is attached — the same
+    cold-start fleet and admission/scaling ramp, so sharding the master
+    never multiplies the provider's concurrency grant."""
 
     #: human-readable pool kind ("local" | "elastic")
     kind: str = "base"
@@ -511,11 +517,16 @@ def as_completed(futures: Iterable[ElasticFuture],
     """Yield futures as they complete (master-side result queue drain).
 
     Event-driven: blocks on the futures' shared condition variable via
-    ``CompletionQueue`` instead of the old 100 us ``done()`` poll."""
+    ``CompletionQueue`` instead of the old 100 us ``done()`` poll, and
+    pops each ready wave in ONE lock acquisition
+    (``CompletionQueue.drain``) instead of re-locking per future."""
     fs = list(futures)
     cq = CompletionQueue(fs)
     deadline = None if timeout is None else time.monotonic() + timeout
-    for _ in range(len(fs)):
+    done = 0
+    while done < len(fs):
         remaining = (None if deadline is None
                      else deadline - time.monotonic())
-        yield cq.next(timeout=remaining)
+        for f in cq.drain(timeout=remaining):
+            done += 1
+            yield f

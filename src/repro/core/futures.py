@@ -249,3 +249,42 @@ class CompletionQueue:
                     raise TimeoutError(
                         f"{n_pending} futures still pending")
                 self._cond.wait(remaining)
+
+    def drain(self, max_items: Optional[int] = None,
+              timeout: Optional[float] = None) -> List["ElasticFuture"]:
+        """Pop *every* settled future under one lock acquisition.
+
+        Blocks exactly like :meth:`next` until at least one future has
+        settled, then returns the whole ready batch (oldest first, up
+        to ``max_items``) instead of one item per lock round-trip —
+        the batched completion delivery ``run_irregular`` amortizes its
+        settle cost with.  Raises ``TimeoutError`` after ``timeout``
+        seconds with nothing settled and ``LookupError`` when no future
+        is registered at all, same as :meth:`next`.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._cond:
+                if self._done:
+                    if max_items is None or max_items >= len(self._done):
+                        out = list(self._done)
+                        self._done.clear()
+                    else:
+                        out = [self._done.popleft()
+                               for _ in range(max_items)]
+                    return out
+                if not self._pending:
+                    raise LookupError("no futures registered")
+                n_pending = len(self._pending)
+            # virtual-time pools: advance one event instead of waiting
+            if any(pool._pump_one() for pool in self._advancers):
+                continue
+            with self._cond:
+                if self._done:
+                    continue
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"{n_pending} futures still pending")
+                self._cond.wait(remaining)

@@ -68,6 +68,14 @@ class WorkSpec:
     reduce: Callable[[Any, Any], Any] = _keep_state
     #: accumulator constructor
     init: Callable[[], Any] = lambda: None
+    #: associative+commutative combine of two accumulators — required
+    #: for ``run_irregular(..., shards=K)``: each shard folds its own
+    #: accumulator with ``reduce`` and the driver tree-merges the K
+    #: partials at join.  For bit-identical results across any K, the
+    #: (reduce, merge, finalize) triple must be order-insensitive
+    #: (exact int/counter sums, disjoint writes, or a canonicalizing
+    #: ``finalize`` — see ``bc_spec``).
+    merge: Optional[Callable[[Any, Any], Any]] = None
     #: final state -> output transform
     finalize: Callable[[Any], Any] = lambda state: state
     #: a-priori work estimate per item (characterization / cost model)
@@ -113,6 +121,10 @@ class IrregularResult:
     cold_starts: int = 0
     #: (old, new) capacity decisions the autoscale policy issued
     autoscale_decisions: List[tuple] = field(default_factory=list)
+    #: master shards that drove the run (1 = classic single master)
+    shards: int = 1
+    #: work-stealing transfers between shards (sharded driver only)
+    steals: int = 0
 
     @property
     def throughput(self) -> float:
@@ -143,6 +155,7 @@ def run_irregular(
     timeout: Optional[float] = None,
     batching: Optional[bool] = None,
     arrivals: Optional[Iterable[Tuple[float, Any]]] = None,
+    shards: Optional[int] = None,
 ) -> IrregularResult:
     """Drive ``spec`` over ``pool`` to completion.
 
@@ -201,7 +214,40 @@ def run_irregular(
                           spawning completion, closed-loop.  This is how
                           serving traces (requests arriving over time)
                           replay exactly.
+    shards                partition the frontier across K master shards
+                          (each owning a ``ShardView`` slice of the
+                          pool's capacity, its own accumulator, and —
+                          on a ``ShardedTraceStore`` — its own trace
+                          segment) with work-stealing between them and
+                          batched completion delivery.  Requires
+                          ``spec.merge``; results are bit-identical to
+                          ``shards=1`` when the spec's fold is
+                          order-insensitive (all three paper workloads
+                          are).  Incompatible with ``controller``,
+                          ``speculative_deadline`` and ``arrivals``.
     """
+    if shards is not None and shards > 1:
+        if controller is not None:
+            raise ValueError(
+                f"{spec.name}: shards>1 is incompatible with controller= "
+                f"(per-completion shape retuning is single-master)")
+        if speculative_deadline is not None:
+            raise ValueError(
+                f"{spec.name}: shards>1 is incompatible with "
+                f"speculative_deadline= (gathered waves are not "
+                f"individually tracked)")
+        if arrivals is not None:
+            raise ValueError(
+                f"{spec.name}: shards>1 is incompatible with arrivals= "
+                f"(open-loop release order is single-master)")
+        if spec.merge is None:
+            raise ValueError(
+                f"{spec.name}: shards>1 requires spec.merge to combine "
+                f"per-shard accumulators at join")
+        return _run_sharded(pool, spec, shards=shards, shape=shape,
+                            initial_shape=initial_shape,
+                            autoscale=autoscale, timeout=timeout,
+                            batching=batching)
     t0 = time.monotonic()
     shape = shape or spec.shape
     if batching and spec.execute_batch is None:
@@ -380,7 +426,14 @@ def run_irregular(
             slice_s = max(speculative_deadline / 4, 1e-3)
             wait = slice_s if wait is None else min(wait, slice_s)
         try:
-            f = cq.next(timeout=wait)
+            # batched completion delivery: pop everything ready under
+            # one lock acquisition (CompletionQueue.drain) instead of
+            # re-acquiring per completion.  Open-loop arrivals keep
+            # max_items=1 so arrival releases interleave with
+            # completions at exactly the recorded instants.
+            batch = cq.drain(
+                max_items=1 if pending_arrivals is not None else None,
+                timeout=wait)
         except TimeoutError:
             if speculative_deadline is not None:
                 scan_stragglers()
@@ -389,26 +442,28 @@ def run_irregular(
             # a busy completion stream must not mask stragglers: check
             # deadlines on the completion path too, not only when idle
             scan_stragglers()
-        d = outstanding.pop(f)
-        state = spec.reduce(state, f.result())
-        if controller is not None:
-            shape = controller.update(len(outstanding))
-        dispatch_ready(list(spec.split(f.result(), shape)), shape,
-                       parent=f._task.task_id)
-        if observe_completion is not None:
-            # latency-targeting policies (SLO autoscale) consume each
-            # completion's queue delay — this is what lets a recorded
-            # serving policy be re-tuned offline through trace replay
-            t = f._task
-            observe_completion(
-                queue_delay_s=max(0.0, (t.start_time or 0.0)
-                                  - (t.submit_time or 0.0)),
-                duration_s=max(0.0, (t.end_time or 0.0)
-                               - (t.start_time or 0.0)),
-                now=(pool_clock.now() if pool_clock is not None
-                     else time.monotonic()))
-        if autoscale is not None:
-            apply_autoscale()
+        for f in batch:
+            outstanding.pop(f)
+            state = spec.reduce(state, f.result())
+            if controller is not None:
+                shape = controller.update(len(outstanding))
+            dispatch_ready(list(spec.split(f.result(), shape)), shape,
+                           parent=f._task.task_id)
+            if observe_completion is not None:
+                # latency-targeting policies (SLO autoscale) consume
+                # each completion's queue delay — this is what lets a
+                # recorded serving policy be re-tuned offline through
+                # trace replay
+                t = f._task
+                observe_completion(
+                    queue_delay_s=max(0.0, (t.start_time or 0.0)
+                                      - (t.submit_time or 0.0)),
+                    duration_s=max(0.0, (t.end_time or 0.0)
+                                   - (t.start_time or 0.0)),
+                    now=(pool_clock.now() if pool_clock is not None
+                         else time.monotonic()))
+            if autoscale is not None:
+                apply_autoscale()
 
     snap = pool.snapshot()
     wall = time.monotonic() - t0
@@ -449,6 +504,251 @@ def run_irregular(
         cold_starts=cold_starts,
         autoscale_decisions=(list(autoscale.resize_log)
                              if autoscale is not None else []),
+    )
+
+
+def _steal_half(frontiers: List[deque], thief: int) -> Optional[int]:
+    """Work-stealing transfer: move half of the largest backlog onto
+    the ``thief`` shard's drained frontier.
+
+    Victim = the shard with the most queued items (ties broken toward
+    the lowest index, deterministically); no steal when every other
+    frontier holds fewer than 2 items.  The OLDEST half migrates
+    (popped from the victim's front, appended in order), so both
+    queues keep their FIFO discipline.  Returns the victim index, or
+    ``None`` when there was nothing worth stealing.
+    """
+    candidates = [v for v in range(len(frontiers))
+                  if v != thief and len(frontiers[v]) >= 2]
+    if not candidates:
+        return None
+    victim = max(candidates, key=lambda v: (len(frontiers[v]), -v))
+    thief_q, victim_q = frontiers[thief], frontiers[victim]
+    for _ in range(len(victim_q) // 2):
+        thief_q.append(victim_q.popleft())
+    return victim
+
+
+def _tree_merge(states: List[Any],
+                merge: Callable[[Any, Any], Any]) -> Any:
+    """Pairwise tree-combine of per-shard accumulators in shard-index
+    order — ((s0·s1)·(s2·s3))··· — O(log K) merge depth with a
+    grouping that is deterministic for every K."""
+    while len(states) > 1:
+        nxt = [merge(states[i], states[i + 1])
+               for i in range(0, len(states) - 1, 2)]
+        if len(states) % 2:
+            nxt.append(states[-1])
+        states = nxt
+    return states[0]
+
+
+def _run_sharded(
+    pool: Pool,
+    spec: WorkSpec,
+    *,
+    shards: int,
+    shape: Optional[TaskShape],
+    initial_shape: Optional[TaskShape],
+    autoscale: Optional[AutoscalePolicy],
+    timeout: Optional[float],
+    batching: Optional[bool],
+) -> IrregularResult:
+    """K-master sharded drive behind ``run_irregular(shards=K)``.
+
+    The frontier is partitioned across K shards (seeds round-robin);
+    each shard owns a :class:`~repro.core.pool.ShardView` slice of the
+    ONE pool's capacity, folds completions into its own accumulator
+    with ``spec.reduce``, and queues ``spec.split`` children locally.
+    A shard whose frontier drains while it still has free slots steals
+    half the largest backlog (:func:`_steal_half`).  Dispatch is
+    wave-oriented: with ``batching=True`` a shard's backlog is spread
+    over its free slots as ``submit_gather`` waves — ONE carrier task,
+    ONE completion record, ONE master wakeup per wave — and all shards
+    share one :class:`CompletionQueue` drained in batches, so the
+    per-item master cost is the amortized sliver that makes
+    million-task frontiers driver-feasible.  At join the K accumulators
+    tree-merge (``spec.merge``) and ``spec.finalize`` runs once.
+    """
+    t0 = time.monotonic()
+    shape = shape or spec.shape
+    if batching and spec.execute_batch is None:
+        raise ValueError(
+            f"{spec.name}: batching=True requires spec.execute_batch")
+    batching = bool(batching)
+    K = shards
+    views = pool.shard_views(K)
+    # frontier entries: (item, shape, parent_task_id)
+    frontiers: List[deque] = [deque() for _ in range(K)]
+    states: List[Any] = [spec.init() for _ in range(K)]
+    cq = CompletionQueue()
+    # future -> (shard, slots_held, is_gather)
+    owner: Dict[ElasticFuture, Tuple[int, int, bool]] = {}
+    inflight = [0] * K
+    n_dispatched = 0
+    steals = 0
+
+    seed_shape = initial_shape or shape
+    for i, item in enumerate(spec.seed(seed_shape)):
+        frontiers[i % K].append((item, seed_shape, PARENT_ROOT))
+
+    # per-run windows — same capture as the single-master path
+    has_events = getattr(pool, "events", None) is not None
+    events_start = len(pool.events) if has_events else 0
+    pool_clock = pool.events.clock if has_events else None
+    vt0 = getattr(pool, "virtual_time_s", None) or 0.0
+    ramp_t0: List[float] = []
+    deadline = None if timeout is None else t0 + timeout
+
+    def apply_autoscale() -> None:
+        # identical to the single-master policy hook: ONE pool, ONE
+        # provider ramp — the shard views just re-slice whatever the
+        # policy is granted
+        cap = pool.capacity
+        now = (pool_clock.now() if pool_clock is not None
+               else time.monotonic())
+        target = autoscale.decide(pending=pool.pending(),
+                                  idle=pool.idle_capacity(),
+                                  capacity=cap, now=now)
+        provider = getattr(pool, "provider", None)
+        if provider is not None and target > cap and has_events:
+            if not ramp_t0:
+                t_first, _ = pool.events.span()
+                ramp_t0.append(t_first)
+            elapsed = max(0.0, pool_clock.now() - ramp_t0[0])
+            granted = provider.allowed_concurrency(elapsed)
+            target = max(cap, min(target, granted))
+        if target != cap:
+            pool.resize(target)
+            autoscale.resize_log.append((cap, target))
+
+    def fill(s: int) -> None:
+        """Dispatch shard ``s``'s ready items into its free slots."""
+        nonlocal n_dispatched
+        fr = frontiers[s]
+        view = views[s]
+        while fr:
+            free = view.slots - inflight[s]
+            if free <= 0:
+                return
+            if batching and len(fr) > 1:
+                # spread the backlog over the free slots —
+                # ceil(len/free) items per gathered wave — taking only
+                # a same-shape run (seed waves may carry the wide
+                # initial_shape while split children carry the steady
+                # shape)
+                k = min(len(fr), -(-len(fr) // free))
+                shp = fr[0][1]
+                chunk = [fr.popleft()]
+                while fr and len(chunk) < k and fr[0][1] is shp:
+                    chunk.append(fr.popleft())
+                if len(chunk) > 1:
+                    items = [c[0] for c in chunk]
+                    parents = {c[2] for c in chunk}
+                    f = view.submit_gather(
+                        lambda batch, _s=shp: spec.execute_batch(
+                            batch, _s),
+                        items,
+                        item_fn=lambda item, _s=shp: spec.execute(
+                            item, _s),
+                        cost_hints=[spec.cost_hint(it) for it in items],
+                        parent=(parents.pop() if len(parents) == 1
+                                else None))
+                    # a fused carrier holds one worker slot; decomposed
+                    # waves hold one per item
+                    held = (1 if pool.supports_batching
+                            else len(items))
+                    owner[f] = (s, held, True)
+                    inflight[s] += held
+                    cq.add(f)
+                    n_dispatched += len(items)
+                    continue
+                item, shp, parent = chunk[0]
+            else:
+                item, shp, parent = fr.popleft()
+            f = view.submit(spec.execute, item, shp,
+                            cost_hint=spec.cost_hint(item),
+                            parent=parent)
+            owner[f] = (s, 1, False)
+            inflight[s] += 1
+            cq.add(f)
+            n_dispatched += 1
+
+    def settle(f: ElasticFuture) -> None:
+        s, held, is_gather = owner.pop(f)
+        inflight[s] -= held
+        results = f.result() if is_gather else [f.result()]
+        parent_id = f._task.task_id
+        st = states[s]
+        fr = frontiers[s]
+        for r in results:
+            st = spec.reduce(st, r)
+            for child in spec.split(r, shape):
+                fr.append((child, shape, parent_id))
+        states[s] = st
+
+    while True:
+        for s in range(K):
+            fill(s)
+        # steal pass: a drained shard with free slots takes half of
+        # the largest backlog, then dispatches it immediately
+        for s in range(K):
+            if not frontiers[s] and inflight[s] < views[s].slots:
+                if _steal_half(frontiers, s) is not None:
+                    steals += 1
+                    fill(s)
+        if not owner:
+            if any(frontiers):  # pragma: no cover — slots >= 1 always
+                raise RuntimeError(
+                    f"{spec.name}: sharded driver stalled with "
+                    f"{sum(map(len, frontiers))} queued items")
+            break
+        remaining = (None if deadline is None
+                     else deadline - time.monotonic())
+        if remaining is not None and remaining <= 0:
+            raise TimeoutError(
+                f"{spec.name}: {len(owner)} dispatches still "
+                f"outstanding after {timeout}s")
+        for f in cq.drain(timeout=remaining):
+            settle(f)
+        if autoscale is not None:
+            # once per drained batch: capacity follows the merged
+            # frontier, amortized like the completions themselves
+            apply_autoscale()
+
+    snap = pool.snapshot()
+    wall = time.monotonic() - t0
+    vt = getattr(pool, "virtual_time_s", None)
+    makespan = (vt - vt0) if vt is not None else wall
+    cost = None
+    cold_starts = snap.get("cold_starts", 0)
+    concurrency_series: List[tuple] = []
+    capacity_series: List[tuple] = []
+    if has_events:
+        log = pool.events
+        window = (log if _prefix_is_capacity_only(log, events_start)
+                  else log.tail(events_start))
+        cost = serverless_cost(window, wall_time_s=makespan,
+                               provider=getattr(pool, "provider", None))
+        concurrency_series = window.concurrency_series()
+        capacity_series = window.capacity_series()
+        cold_starts = window.cold_starts()
+    return IrregularResult(
+        output=spec.finalize(_tree_merge(list(states), spec.merge)),
+        wall_time_s=wall,
+        tasks=n_dispatched,
+        peak_concurrency=snap.get("peak_concurrency", 0),
+        speculated=0,
+        pool_snapshot=snap,
+        makespan_s=makespan,
+        cost=cost,
+        concurrency_series=concurrency_series,
+        capacity_series=capacity_series,
+        cold_starts=cold_starts,
+        autoscale_decisions=(list(autoscale.resize_log)
+                             if autoscale is not None else []),
+        shards=K,
+        steals=steals,
     )
 
 

@@ -28,12 +28,14 @@ Drive any of them with ``repro.core.run_irregular`` and a ``WorkSpec``.
 from __future__ import annotations
 
 import abc
+import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from .futures import (CompletionQueue, ElasticFuture, Task, TaskRecord,
                       TaskState)
 
-__all__ = ["Pool", "make_pool", "register_pool", "registered_pools"]
+__all__ = ["Pool", "ShardView", "make_pool", "register_pool",
+           "registered_pools"]
 
 
 class Pool(abc.ABC):
@@ -110,12 +112,16 @@ class Pool(abc.ABC):
         futures = [self.submit(fn, item) for item in items]
         cq = CompletionQueue(futures)
         first_exc: Optional[BaseException] = None
-        for _ in range(len(futures)):
-            f = cq.next()
-            if first_exc is None and f.state is TaskState.FAILED:
-                first_exc = f._exc
-                for g in futures:
-                    g.cancel()  # no-op on settled/running futures
+        unsettled = len(futures)
+        while unsettled:
+            # batched pop: one lock acquisition per ready wave, not per
+            # completion (CompletionQueue.drain)
+            for f in cq.drain():
+                unsettled -= 1
+                if first_exc is None and f.state is TaskState.FAILED:
+                    first_exc = f._exc
+                    for g in futures:
+                        g.cancel()  # no-op on settled/running futures
         if first_exc is not None:
             raise first_exc
         return [f.result() for f in futures]
@@ -214,6 +220,108 @@ class Pool(abc.ABC):
         cf.add_done_callback(fan_out)
         return children
 
+    def submit_gather(
+        self,
+        batch_fn: Callable[[List[Any]], List[Any]],
+        items: Sequence[Any],
+        *,
+        item_fn: Optional[Callable[[Any], Any]] = None,
+        cost_hints: Optional[Sequence[float]] = None,
+        parent: Optional[int] = None,
+    ) -> ElasticFuture:
+        """Submit ``items`` as one batch delivered as ONE completion.
+
+        Where :meth:`submit_batch` fans a fused carrier back out into
+        one future per item (N wakeups, N completion records),
+        ``submit_gather`` keeps the carrier *as* the completion: the
+        returned future settles once with the ordered list of per-item
+        results.  This is the batched completion-delivery primitive
+        under the sharded ``run_irregular`` driver — one master wakeup
+        and one event triple per wave instead of per item.
+
+        Fusing backends (``supports_batching``) run a single carrier
+        submission of ``batch_fn``; decomposing backends submit
+        ``item_fn`` per item and aggregate with a countdown callback,
+        so the caller still sees a single settlement.  The first item
+        failure settles the gather with that exception and cancels
+        not-yet-started siblings (stateless tasks — running ones just
+        finish into the stats log).
+        """
+        items = list(items)
+        if not items:
+            raise ValueError("submit_gather needs at least one item")
+        hints = (list(cost_hints) if cost_hints is not None
+                 else [1.0] * len(items))
+        if len(hints) != len(items):
+            raise ValueError(
+                f"cost_hints ({len(hints)}) and items ({len(items)}) "
+                f"must align")
+
+        if self.supports_batching:
+            def carrier() -> List[Any]:
+                results = batch_fn(items)
+                if (not isinstance(results, (list, tuple))
+                        or len(results) != len(items)):
+                    got = (len(results)
+                           if isinstance(results, (list, tuple))
+                           else type(results).__name__)
+                    raise TypeError(
+                        f"batch body must return {len(items)} results, "
+                        f"got {got}")
+                return list(results)
+
+            return self.submit(carrier, cost_hint=float(sum(hints)),
+                               parent=parent)
+
+        # decomposing path: per-item submissions, one aggregated wakeup
+        if item_fn is None:
+            def item_fn(item: Any) -> Any:
+                return batch_fn([item])[0]
+        children: List[ElasticFuture] = []
+        try:
+            for item, h in zip(items, hints):
+                children.append(self.submit(item_fn, item, cost_hint=h,
+                                            parent=parent))
+        except BaseException:
+            for f in children:
+                f.cancel()
+            raise
+        gather = self._make_future(Task(fn=None,
+                                        cost_hint=float(sum(hints))))
+        remaining = [len(children)]
+        lock = threading.Lock()
+
+        def on_child(f: ElasticFuture) -> None:
+            if f.state is TaskState.FAILED:
+                for c in children:
+                    c.cancel()  # no-op on settled/running futures
+                gather._set_exception(f._exc)  # first settlement wins
+            elif f.state is TaskState.CANCELLED:
+                gather._set_exception(
+                    RuntimeError("gathered task was cancelled"))
+            with lock:
+                remaining[0] -= 1
+                last = remaining[0] == 0
+            if last and not gather.done():
+                gather._set_result([c._result for c in children])
+
+        for c in children:
+            c.add_done_callback(on_child)
+        return gather
+
+    def shard_views(self, shards: int) -> List["ShardView"]:
+        """Partition this pool's capacity into ``shards`` per-shard
+        views over the ONE underlying pool — and, when the pool carries
+        a ``ProviderModel``, the one admission/scaling ramp.  View ``i``
+        owns ``capacity/shards`` worker slots (re-sliced dynamically on
+        every read, so ``resize`` redistributes across shards), and its
+        submissions route trace events to shard ``i``'s segment when
+        the pool records to a
+        :class:`~repro.trace.store.ShardedTraceStore`."""
+        if shards <= 0:
+            raise ValueError("shards must be positive")
+        return [ShardView(self, i, shards) for i in range(shards)]
+
     @property
     def records(self) -> List[TaskRecord]:
         """Completion log (characterization + cost accounting)."""
@@ -228,6 +336,55 @@ class Pool(abc.ABC):
 
     def __exit__(self, *exc: Any) -> None:
         self.shutdown()
+
+
+class ShardView:
+    """One master shard's view of a shared :class:`Pool`.
+
+    The sharded ``run_irregular`` driver partitions the frontier across
+    K shards; each shard dispatches through its own view so that (a)
+    its slot budget is a slice of the ONE pool's capacity — there is a
+    single provider ramp and a single billing timeline, exactly as if
+    one master drove the pool — and (b) its submissions are routed to
+    its own trace segment when the pool records to a
+    :class:`~repro.trace.store.ShardedTraceStore`.
+
+    ``slots`` is re-derived from ``pool.capacity`` on every read:
+    capacity % shards extra slots go to the lowest-indexed views, and a
+    ``resize`` (autoscale) redistributes automatically.  Every view
+    always owns at least one slot so no shard can deadlock with work it
+    cannot dispatch.
+    """
+
+    __slots__ = ("pool", "index", "shards")
+
+    def __init__(self, pool: Pool, index: int, shards: int):
+        self.pool = pool
+        self.index = index
+        self.shards = shards
+
+    @property
+    def slots(self) -> int:
+        base, extra = divmod(max(self.pool.capacity, 1), self.shards)
+        return max(1, base + (1 if self.index < extra else 0))
+
+    def _bind(self) -> None:
+        bind = getattr(self.pool.events, "bind_shard", None)
+        if bind is not None:
+            bind(self.index)
+
+    def submit(self, fn: Callable[..., Any], *args: Any,
+               **kwargs: Any) -> ElasticFuture:
+        self._bind()
+        return self.pool.submit(fn, *args, **kwargs)
+
+    def submit_gather(self, *args: Any, **kwargs: Any) -> ElasticFuture:
+        self._bind()
+        return self.pool.submit_gather(*args, **kwargs)
+
+    def __repr__(self) -> str:
+        return (f"ShardView({self.pool.kind}, {self.index}/{self.shards}, "
+                f"slots={self.slots})")
 
 
 _REGISTRY: Dict[str, Callable[..., Pool]] = {}

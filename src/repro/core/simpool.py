@@ -136,7 +136,8 @@ class SimPool(Pool):
             self.stats = ExecutorStats(clock=self.clock)
         self._fleet = (ContainerFleet(provider)
                        if provider is not None else None)
-        self._heap: List[Tuple[float, int, tuple]] = []
+        # (end_vt, seq, container id, entry)
+        self._heap: List[Tuple[float, int, int, tuple]] = []
         self._waiting: deque = deque()
         self._seq = itertools.count()
         self._shutdown = False
@@ -263,6 +264,7 @@ class SimPool(Pool):
         task.start_time = now
         task.worker = self.name
         cold = False
+        cid = -1
         if self._fleet is not None:
             cid, cold = self._fleet.acquire(now)
             task.worker = f"{self.name}-c{cid}"
@@ -272,21 +274,22 @@ class SimPool(Pool):
                     if self.provider is not None else self.invoke_overhead)
         self.stats.on_start(task.task_id, task.worker)
         future._set_running()
+        # the container id rides the heap tuple so the pump releases it
+        # without re-parsing the worker-name string per completion
         heapq.heappush(self._heap,
-                       (now + overhead + body_dur, next(self._seq), entry))
+                       (now + overhead + body_dur, next(self._seq), cid,
+                        entry))
 
     def _pump_one(self) -> bool:
         """Advance virtual time by one completion event.  Returns False
         when the heap is drained (nothing outstanding)."""
         if not self._heap:
             return False
-        end_vt, _, (future, task, result, exc, _dur) = \
+        end_vt, _, cid, (future, task, result, exc, _dur) = \
             heapq.heappop(self._heap)
         self.clock.advance_to(end_vt)
         task.end_time = end_vt
         if self._fleet is not None:
-            # worker name carries the container id it ran on
-            cid = int(task.worker.rsplit("-c", 1)[1])
             self._fleet.release(cid, end_vt)
         record = TaskRecord(
             task_id=task.task_id, worker=task.worker,

@@ -329,3 +329,25 @@ class EventLog:
         evs.sort(key=lambda e: e.t)
         out._events = evs
         return out
+
+    @staticmethod
+    def iter_merged(logs: Sequence["EventLog"],
+                    exclude_kinds: Sequence[str] = ()) -> Iterable[Event]:
+        """Stream the timestamp-ordered union of several timelines
+        WITHOUT materializing any of them — a ``heapq.merge`` over each
+        log's own (already chronological) stream.  This is how a
+        :class:`~repro.trace.store.ShardedTraceStore` presents K
+        per-shard segments as one timeline in O(answer) memory;
+        spill-backed logs contribute via their streaming
+        ``iter_events`` when they have one."""
+        import heapq
+
+        def stream(log: "EventLog") -> Iterable[Event]:
+            it = getattr(log, "iter_events", None)
+            events = it() if it is not None else log.events()
+            if not exclude_kinds:
+                return events
+            return (e for e in events if e.kind not in exclude_kinds)
+
+        return heapq.merge(*(stream(log) for log in logs),
+                           key=lambda e: e.t)

@@ -28,11 +28,11 @@ from .analytics import TraceAnalytics, render_concurrency_figure
 from .calibrate import ProviderFit, calibrate, fit_provider
 from .replay import (ReplayTask, ReplayWorkload, extract_workload,
                      replay, replay_spec, what_if)
-from .store import (TraceReader, TraceStore, event_from_dict,
-                    event_to_dict, read_trace)
+from .store import (ShardedTraceStore, TraceReader, TraceStore,
+                    event_from_dict, event_to_dict, read_trace)
 
 __all__ = [
-    "TraceStore", "TraceReader", "read_trace",
+    "TraceStore", "ShardedTraceStore", "TraceReader", "read_trace",
     "event_to_dict", "event_from_dict",
     "TraceAnalytics", "render_concurrency_figure",
     "ReplayTask", "ReplayWorkload", "extract_workload", "replay_spec",

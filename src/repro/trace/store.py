@@ -29,20 +29,23 @@ shortest-round-trip reprs).
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import tempfile
 import threading
 from collections import deque
-from typing import Iterable, Iterator, List, Optional, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 from ..core.futures import TaskRecord
-from ..core.telemetry import (COMPLETE, EVENT_KINDS, Clock, Event,
+from ..core.telemetry import (CAPACITY_GROW, CAPACITY_SHRINK, COMPLETE,
+                              EVENT_KINDS, SUBMIT, Clock, Event,
                               EventLog)
 from .analytics import TraceAnalytics
 
-__all__ = ["TraceStore", "TraceReader", "event_to_dict",
-           "event_from_dict", "read_trace", "iter_trace_events"]
+__all__ = ["TraceStore", "ShardedTraceStore", "TraceReader",
+           "event_to_dict", "event_from_dict", "read_trace",
+           "iter_trace_events"]
 
 
 def iter_trace_events(trace) -> Iterable[Event]:
@@ -307,9 +310,28 @@ class _TraceWindow(EventLog):
         super().__init__(clock=store.clock)
         self._store = store
         self._start = start
+        # (store generation, folded analytics) — see _fold()
+        self._fold_cache: Optional[Tuple[int, TraceAnalytics]] = None
 
     def __len__(self) -> int:
         return max(0, len(self._store) - self._start)
+
+    def _fold(self) -> TraceAnalytics:
+        """ONE streamed pass over the window, cached per store
+        generation: every derived view below reads the same fold, so
+        repeated ``characterize()`` / cost reads on a reused pool parse
+        the spilled JSONL once instead of once per view (~4x less
+        parse).  The cache invalidates as soon as the store grows."""
+        with self._store._lock:
+            gen = self._store._written
+        cached = self._fold_cache
+        if cached is not None and cached[0] == gen:
+            return cached[1]
+        a = TraceAnalytics(self._store._analytics.max_series_points)
+        for e in self.iter_events():
+            a.observe(e)
+        self._fold_cache = (gen, a)
+        return a
 
     def iter_events(self, start: int = 0) -> Iterator[Event]:
         return self._store.iter_events(self._start + start)
@@ -333,64 +355,213 @@ class _TraceWindow(EventLog):
         return list(self.iter_records())
 
     def counts(self) -> dict:
-        out = {k: 0 for k in EVENT_KINDS}
-        for e in self.iter_events():
-            out[e.kind] += 1
-        return out
+        return dict(self._fold().counts)
 
     def cold_starts(self) -> int:
-        from ..core.telemetry import COLD_START
-        n = 0
-        for e in self.iter_events():
-            if e.kind == COLD_START:
-                n += 1
-        return n
+        return self._fold().cold_starts
 
     def span(self) -> Tuple[float, float]:
-        t_first = t_last = None
-        for e in self.iter_events():
-            if t_first is None:
-                t_first = e.t
-            t_last = e.t
-        if t_first is None:
-            return (0.0, 0.0)
-        return (t_first, t_last)
-
-    def _monotone(self) -> bool:
-        with self._store._lock:
-            return self._store._analytics.monotone
+        return self._fold().span()
 
     def concurrency_series(self) -> List[Tuple[float, int]]:
-        if self._monotone():
-            series: List[Tuple[float, int]] = []
-            active = 0
-            from ..core.telemetry import REQUEUE, START
-            for e in self.iter_events():
-                if e.kind == START:
-                    active += 1
-                elif e.kind in (COMPLETE, REQUEUE):
-                    active -= 1
-                else:
-                    continue
-                series.append((e.t, active))
-            return series
+        a = self._fold()
+        if a.monotone:
+            return list(a.concurrency)
         # out-of-order timestamps: the shared sorted recompute (reads
         # the window via self.events())
         return EventLog._recompute_concurrency_series(self)
 
     def capacity_series(self) -> List[Tuple[float, int]]:
-        from ..core.telemetry import CAPACITY_GROW, CAPACITY_SHRINK
-        if self._monotone():
-            return [(e.t, e.capacity) for e in self.iter_events()
-                    if e.kind in (CAPACITY_GROW, CAPACITY_SHRINK)
-                    and e.capacity is not None]
+        a = self._fold()
+        if a.monotone:
+            return list(a.capacity)
         return EventLog._recompute_capacity_series(self)
 
     def peak_concurrency(self) -> int:
-        return max((a for _, a in self.concurrency_series()), default=0)
+        a = self._fold()
+        if a.monotone:
+            return a.peak_concurrency
+        return max((v for _, v in self.concurrency_series()), default=0)
 
     def tail(self, start: int) -> EventLog:
         return _TraceWindow(self._store, self._start + max(0, start))
+
+
+class ShardedTraceStore(EventLog):
+    """K per-shard :class:`TraceStore` segments behind ONE ``EventLog``
+    surface — the trace backend of ``run_irregular(shards=K)``.
+
+    Each master shard writes its own spill segment (no contention on a
+    single writer); routing is by task ownership: a ``submit`` records
+    the currently bound shard (see :meth:`bind_shard`, called by
+    ``ShardView`` right before delegating a submission) as the task's
+    owner, every later lifecycle event of that task lands in the same
+    segment, and pool-level ``capacity_*`` events land in segment 0.
+    Readers see one timeline: :meth:`iter_events` streams the
+    timestamp-ordered union of all segments
+    (``EventLog.iter_merged`` — a heap merge, O(answer) memory), and
+    the derived series come from a *global* incremental
+    :class:`TraceAnalytics` fed at emit time, so analytics, replay and
+    cost accounting work unchanged on sharded runs.
+    """
+
+    def __init__(self, shards: int, clock: Optional[Clock] = None, *,
+                 ring_size: int = 4096,
+                 path: Optional[str] = None,
+                 index_every: int = 1024,
+                 max_series_points: int = 1 << 20) -> None:
+        if shards <= 0:
+            raise ValueError("shards must be positive")
+        super().__init__(clock)
+        self._events = []  # base-class list intentionally unused
+        self._analytics = TraceAnalytics(max_series_points)
+        self.segments: List[TraceStore] = [
+            TraceStore(clock=self.clock, ring_size=ring_size,
+                       path=(f"{path}.shard{i}" if path is not None
+                             else None),
+                       index_every=index_every,
+                       max_series_points=max_series_points)
+            for i in range(shards)
+        ]
+        self._owner: Dict[int, int] = {}   # task_id -> owning segment
+        self._bound = 0
+        self._written = 0
+
+    # pools rebind ``trace.clock`` to their own at adoption — propagate
+    # to every segment so all K writers stamp from the ONE clock
+    @property
+    def clock(self) -> Clock:
+        return self._clock
+
+    @clock.setter
+    def clock(self, clock: Clock) -> None:
+        self._clock = clock
+        for seg in getattr(self, "segments", ()):
+            seg.clock = clock
+
+    def bind_shard(self, shard: int) -> None:
+        """Route subsequent task submissions to segment ``shard``."""
+        if not 0 <= shard < len(self.segments):
+            raise IndexError(
+                f"shard {shard} out of range for "
+                f"{len(self.segments)} segments")
+        self._bound = shard
+
+    # -- write side --------------------------------------------------------
+    def emit(self, kind: str, *, t: Optional[float] = None,
+             task_id: Optional[int] = None, worker: Optional[str] = None,
+             capacity: Optional[int] = None, ok: Optional[bool] = None,
+             record: Optional[TaskRecord] = None,
+             parent: Optional[int] = None) -> Event:
+        if kind not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {kind!r}")
+        with self._lock:
+            if kind in (CAPACITY_GROW, CAPACITY_SHRINK):
+                seg = 0  # pool-level: ONE capacity staircase
+            elif task_id is None:
+                seg = self._bound
+            elif kind == SUBMIT:
+                self._owner[task_id] = seg = self._bound
+            elif kind == COMPLETE:
+                # terminal: drop the owner entry so the map stays
+                # bounded by in-flight tasks, not trace length
+                seg = self._owner.pop(task_id, self._bound)
+            else:
+                seg = self._owner.get(task_id, self._bound)
+            ev = self.segments[seg].emit(
+                kind, t=t, task_id=task_id, worker=worker,
+                capacity=capacity, ok=ok, record=record, parent=parent)
+            self._written += 1
+            self._analytics.observe(ev)
+        return ev
+
+    def flush(self) -> None:
+        for seg in self.segments:
+            seg.flush()
+
+    def close(self, delete: Optional[bool] = None) -> None:
+        for seg in self.segments:
+            seg.close(delete)
+
+    # -- read side ---------------------------------------------------------
+    def __len__(self) -> int:
+        with self._lock:
+            return self._written
+
+    @property
+    def resident_events(self) -> int:
+        return sum(seg.resident_events for seg in self.segments)
+
+    @property
+    def paths(self) -> List[str]:
+        return [seg.path for seg in self.segments]
+
+    def iter_events(self, start: int = 0) -> Iterator[Event]:
+        """Stream the merged timeline from global index ``start`` —
+        a heap merge over the segments' own chronological streams."""
+        merged = EventLog.iter_merged(self.segments)
+        return itertools.islice(merged, start, None)
+
+    def events(self, kind: Optional[str] = None) -> List[Event]:
+        evs = list(self.iter_events())
+        if kind is None:
+            return evs
+        return [e for e in evs if e.kind == kind]
+
+    def __iter__(self):
+        return self.iter_events()
+
+    def iter_records(self) -> Iterator[TaskRecord]:
+        for e in self.iter_events():
+            if e.kind == COMPLETE and e.record is not None:
+                yield e.record
+
+    @property
+    def records(self) -> List[TaskRecord]:
+        return list(self.iter_records())
+
+    def counts(self) -> dict:
+        with self._lock:
+            return dict(self._analytics.counts)
+
+    def cold_starts(self) -> int:
+        with self._lock:
+            return self._analytics.cold_starts
+
+    def span(self) -> Tuple[float, float]:
+        with self._lock:
+            return self._analytics.span()
+
+    def peak_concurrency(self) -> int:
+        with self._lock:
+            if self._analytics.monotone:
+                return self._analytics.peak_concurrency
+        return max((a for _, a in self.concurrency_series()), default=0)
+
+    def concurrency_series(self) -> List[Tuple[float, int]]:
+        with self._lock:
+            if self._analytics.monotone:
+                return list(self._analytics.concurrency)
+        return self._recompute_concurrency_series()
+
+    def capacity_series(self) -> List[Tuple[float, int]]:
+        with self._lock:
+            if self._analytics.monotone:
+                return list(self._analytics.capacity)
+        return self._recompute_capacity_series()
+
+    @property
+    def analytics(self) -> TraceAnalytics:
+        return self._analytics
+
+    def utilization(self) -> dict:
+        with self._lock:
+            return self._analytics.utilization()
+
+    def tail(self, start: int) -> EventLog:
+        """Streaming per-run window over the merged timeline (same
+        contract as :meth:`TraceStore.tail`)."""
+        return _TraceWindow(self, max(0, start))
 
 
 class TraceReader:

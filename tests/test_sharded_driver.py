@@ -1,0 +1,452 @@
+"""PR-7 sharded master: work-stealing frontier shards, gathered batch
+delivery, batched completion drain, sharded trace segments.
+
+The hard contract under test is *result invariance*: with a fixed seed,
+``run_irregular(shards=K)`` must produce bit-identical outputs to the
+classic single-master drive for every real WorkSpec — the sharding is
+a master-loop throughput optimization, never a semantics change.
+"""
+import threading
+import time
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.algorithms import (MSParams, RMATParams, UTSParams, bc_spec,
+                              ms_spec, uts_sequential, uts_spec)
+from repro.core import (CompletionQueue, ShardView, TaskShape, WorkSpec,
+                        make_pool, run_irregular)
+from repro.core.irregular import _steal_half, _tree_merge
+from repro.trace import ShardedTraceStore, TraceStore
+from repro.trace.analytics import _minmax_decimate
+
+UTS_P = UTSParams(seed=19, b0=4.0, max_depth=7, chunk=256)
+MS_P = MSParams(width=128, height=128, max_dwell=64,
+                initial_subdivision=4, max_depth=3)
+BC_P = RMATParams(scale=6, edge_factor=4, seed=7)
+
+
+def _drive(spec, *, shards, batching, max_concurrency=64, **kw):
+    with make_pool("sim", max_concurrency=max_concurrency) as pool:
+        return run_irregular(pool, spec, batching=batching,
+                             shards=None if shards == 1 else shards,
+                             **kw)
+
+
+# -- result invariance: shards=1 vs shards=K bit-identical ------------------
+
+@pytest.mark.parametrize("shards", [2, 3, 4, 8])
+@pytest.mark.parametrize("batching", [False, True])
+def test_uts_bit_identical_across_shards(shards, batching):
+    base = _drive(uts_spec(UTS_P), shards=1, batching=batching,
+                  shape=TaskShape(8, 200))
+    r = _drive(uts_spec(UTS_P), shards=shards, batching=batching,
+               shape=TaskShape(8, 200))
+    assert r.output == base.output == uts_sequential(UTS_P)
+    assert r.shards == shards and base.shards == 1
+    if not batching:
+        # per-task mode dispatches exactly one submit per tree chunk,
+        # so the counts line up too; fused waves group differently
+        assert r.tasks == base.tasks
+
+
+@pytest.mark.parametrize("shards", [2, 5, 8])
+@pytest.mark.parametrize("batching", [False, True])
+def test_ms_bit_identical_across_shards(shards, batching):
+    base = _drive(ms_spec(MS_P), shards=1, batching=batching)
+    r = _drive(ms_spec(MS_P), shards=shards, batching=batching)
+    assert np.array_equal(r.output["image"], base.output["image"])
+    assert r.output["filled"] == base.output["filled"]
+    assert r.output["evaluated"] == base.output["evaluated"]
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_bc_bit_identical_across_shards(shards):
+    # per-task only: fused BC partials sum in-kernel per chunk, so the
+    # float result legitimately depends on how waves group the blocks
+    spec = bc_spec(BC_P, n_tasks=16, regenerate_graph=True)
+    base = _drive(spec, shards=1, batching=False)
+    spec = bc_spec(BC_P, n_tasks=16, regenerate_graph=True)
+    r = _drive(spec, shards=shards, batching=False)
+    assert np.array_equal(r.output, base.output)
+
+
+def test_sharded_run_exercises_stealing():
+    # the uneven UTS tree drains some shards early; virtual time makes
+    # the count deterministic enough to assert the protocol fired
+    r = _drive(uts_spec(UTS_P), shards=4, batching=False,
+               shape=TaskShape(8, 200))
+    assert r.steals > 0
+    base = _drive(uts_spec(UTS_P), shards=1, batching=False,
+                  shape=TaskShape(8, 200))
+    assert base.steals == 0
+    assert r.output == base.output
+
+
+# -- guard rails -------------------------------------------------------------
+
+def test_shards_incompatible_modes_raise():
+    from repro.core import StagedController
+    spec = uts_spec(UTS_P)
+    with make_pool("sim", max_concurrency=8) as pool:
+        with pytest.raises(ValueError, match="controller"):
+            run_irregular(pool, spec, shards=2,
+                          controller=StagedController())
+        with pytest.raises(ValueError, match="speculative"):
+            run_irregular(pool, spec, shards=2, speculative_deadline=1.0)
+        with pytest.raises(ValueError, match="arrivals"):
+            run_irregular(pool, spec, shards=2,
+                          arrivals=[(0.0, "x")])
+
+
+def test_shards_require_merge():
+    spec = WorkSpec(name="no-merge",
+                    seed=lambda shape=None: [1],
+                    execute=lambda item, shape: item,
+                    split=lambda r, shape: [],
+                    reduce=lambda a, r: a + r,
+                    init=lambda: 0,
+                    finalize=lambda t: t)
+    with make_pool("sim", max_concurrency=4) as pool:
+        with pytest.raises(ValueError, match="merge"):
+            run_irregular(pool, spec, shards=2)
+
+
+def test_shard_views_validation():
+    with make_pool("sim", max_concurrency=8) as pool:
+        with pytest.raises(ValueError):
+            pool.shard_views(0)
+        views = pool.shard_views(3)
+        assert [v.index for v in views] == [0, 1, 2]
+        assert all(isinstance(v, ShardView) for v in views)
+        # 8 slots over 3 shards: 3+3+2, every shard keeps >= 1 slot
+        assert [v.slots for v in views] == [3, 3, 2]
+        pool.resize(2)
+        assert [v.slots for v in views] == [1, 1, 1]  # floor of 1
+
+
+# -- steal-half protocol ------------------------------------------------------
+
+def test_steal_half_takes_oldest_half_from_largest_backlog():
+    frontiers = [deque(), deque("abcde"), deque("xy")]
+    victim = _steal_half(frontiers, 0)
+    assert victim == 1
+    assert list(frontiers[0]) == ["a", "b"]        # oldest half, in order
+    assert list(frontiers[1]) == ["c", "d", "e"]
+    assert list(frontiers[2]) == ["x", "y"]
+
+
+def test_steal_half_tie_breaks_to_lowest_index():
+    frontiers = [deque(), deque("ab"), deque("cd")]
+    assert _steal_half(frontiers, 0) == 1
+
+
+def test_steal_half_nothing_worth_stealing():
+    # singleton backlogs are never split: no steal, frontiers untouched
+    frontiers = [deque(), deque("a"), deque("b")]
+    assert _steal_half(frontiers, 0) is None
+    assert list(frontiers[1]) == ["a"] and list(frontiers[2]) == ["b"]
+    assert _steal_half([deque()], 0) is None
+
+
+def test_steal_half_never_steals_from_thief():
+    frontiers = [deque("abcd"), deque("xy")]
+    assert _steal_half(frontiers, 0) == 1
+    assert list(frontiers[0]) == ["a", "b", "c", "d", "x"]
+
+
+# -- termination --------------------------------------------------------------
+
+def test_sharded_empty_seed_terminates():
+    spec = WorkSpec(name="empty",
+                    seed=lambda shape=None: [],
+                    execute=lambda item, shape: item,
+                    split=lambda r, shape: [],
+                    reduce=lambda a, r: a + 1,
+                    init=lambda: 0,
+                    finalize=lambda t: t,
+                    merge=lambda a, b: a + b)
+    r = _drive(spec, shards=4, batching=False)
+    assert r.output == 0 and r.tasks == 0 and r.steals == 0
+
+
+def test_sharded_capacity_smaller_than_shards():
+    # 2 worker slots, 6 shards: every view still reports >= 1 slot and
+    # the run drains (the pool itself is the real concurrency limiter)
+    r = _drive(uts_spec(UTS_P), shards=6, batching=True,
+               max_concurrency=2, shape=TaskShape(8, 200))
+    assert r.output == uts_sequential(UTS_P)
+
+
+def test_sharded_split_free_spec_terminates():
+    spec = WorkSpec(name="flat",
+                    seed=lambda shape=None: list(range(37)),
+                    execute=lambda item, shape: item,
+                    execute_batch=lambda items, shape: list(items),
+                    split=lambda r, shape: [],
+                    reduce=lambda a, r: a + r,
+                    init=lambda: 0,
+                    finalize=lambda t: t,
+                    merge=lambda a, b: a + b)
+    for batching in (False, True):
+        r = _drive(spec, shards=4, batching=batching)
+        assert r.output == sum(range(37))
+
+
+def test_sharded_timeout_raises():
+    with make_pool("local", max_concurrency=2,
+                   invoke_overhead=0.0) as pool:
+        spec = WorkSpec(name="slow",
+                        seed=lambda shape=None: [0, 1, 2, 3],
+                        execute=lambda item, shape: time.sleep(0.2),
+                        split=lambda r, shape: [],
+                        reduce=lambda a, r: a,
+                        init=lambda: 0,
+                        finalize=lambda t: t,
+                        merge=lambda a, b: a)
+        with pytest.raises(TimeoutError):
+            run_irregular(pool, spec, shards=2, timeout=0.05)
+
+
+# -- cross-shard reduction merge ----------------------------------------------
+
+def test_tree_merge_matches_linear_fold():
+    for k in range(1, 9):
+        states = list(range(1, k + 1))
+        assert _tree_merge(states, lambda a, b: a + b) == sum(states)
+
+
+def test_tree_merge_grouping_is_deterministic():
+    # with a NON-associative probe the grouping is visible: it must be
+    # the documented ((s0·s1)·(s2·s3))·... shape, identical every call
+    probe = lambda a, b: f"({a}.{b})"
+    got = _tree_merge(["s0", "s1", "s2", "s3", "s4"], probe)
+    assert got == "(((s0.s1).(s2.s3)).s4)"
+    assert got == _tree_merge(["s0", "s1", "s2", "s3", "s4"], probe)
+
+
+def test_merge_order_independence_of_shard_count():
+    # same workload folded across K in {1,2,3,5,8}: the tree-merge of
+    # per-shard accumulators lands on the same output every time
+    outs = {k: _drive(uts_spec(UTS_P), shards=k, batching=True,
+                      shape=TaskShape(8, 200)).output
+            for k in (1, 2, 3, 5, 8)}
+    assert len(set(outs.values())) == 1
+
+
+# -- submit_gather ------------------------------------------------------------
+
+def test_submit_gather_fusing_single_settlement():
+    with make_pool("sim", max_concurrency=4) as pool:
+        f = pool.submit_gather(lambda xs: [x * x for x in xs],
+                               [1, 2, 3], cost_hints=[1.0, 2.0, 3.0])
+        assert f.result() == [1, 4, 9]
+        # ONE carrier invocation, not three
+        assert pool.snapshot()["invocations"] == 1
+
+
+def test_submit_gather_fused_length_mismatch_fails():
+    with make_pool("sim", max_concurrency=4) as pool:
+        f = pool.submit_gather(lambda xs: [0], [1, 2, 3])
+        with pytest.raises(TypeError, match="3 results"):
+            f.result()
+
+
+def test_submit_gather_decomposing_single_settlement():
+    with make_pool("elastic", max_concurrency=4, invoke_overhead=0.0,
+                   invoke_rate_limit=None) as pool:
+        f = pool.submit_gather(lambda xs: [x * x for x in xs],
+                               [1, 2, 3],
+                               item_fn=lambda x: x * x)
+        assert f.result() == [1, 4, 9]
+        assert pool.snapshot()["invocations"] == 3
+
+
+def test_submit_gather_decomposing_child_failure():
+    def boom(x):
+        if x == 2:
+            raise RuntimeError("item 2 failed")
+        return x
+
+    with make_pool("elastic", max_concurrency=2, invoke_overhead=0.0,
+                   invoke_rate_limit=None) as pool:
+        f = pool.submit_gather(lambda xs: [boom(x) for x in xs],
+                               [1, 2, 3], item_fn=boom)
+        with pytest.raises(RuntimeError, match="item 2 failed"):
+            f.result()
+
+
+def test_submit_gather_validates_inputs():
+    with make_pool("sim", max_concurrency=2) as pool:
+        with pytest.raises(ValueError, match="at least one"):
+            pool.submit_gather(lambda xs: xs, [])
+        with pytest.raises(ValueError, match="align"):
+            pool.submit_gather(lambda xs: xs, [1, 2], cost_hints=[1.0])
+
+
+# -- CompletionQueue.drain ----------------------------------------------------
+
+def _resolved(n):
+    from repro.core.futures import ElasticFuture, Task
+    fs = []
+    for i in range(n):
+        f = ElasticFuture(Task(fn=None))
+        f._set_result(i)
+        fs.append(f)
+    return fs
+
+
+def test_drain_returns_whole_ready_batch():
+    fs = _resolved(5)
+    cq = CompletionQueue(fs)
+    batch = cq.drain()
+    assert [f.result() for f in batch] == [0, 1, 2, 3, 4]
+    with pytest.raises(LookupError):
+        cq.drain()
+
+
+def test_drain_max_items_caps_batch():
+    cq = CompletionQueue(_resolved(5))
+    assert [f.result() for f in cq.drain(max_items=2)] == [0, 1]
+    assert [f.result() for f in cq.drain(max_items=10)] == [2, 3, 4]
+
+
+def test_drain_timeout():
+    from repro.core.futures import ElasticFuture, Task
+    pending = ElasticFuture(Task(fn=lambda: None))
+    cq = CompletionQueue([pending])
+    with pytest.raises(TimeoutError):
+        cq.drain(timeout=0.02)
+
+
+def test_drain_wakes_on_late_completion():
+    from repro.core.futures import ElasticFuture, Task
+    f = ElasticFuture(Task(fn=None))
+    cq = CompletionQueue([f])
+    threading.Timer(0.03, lambda: f._set_result("late")).start()
+    batch = cq.drain(timeout=2.0)
+    assert [g.result() for g in batch] == ["late"]
+
+
+# -- ShardedTraceStore --------------------------------------------------------
+
+def test_sharded_trace_routes_and_merges():
+    store = ShardedTraceStore(3, ring_size=64)
+    with make_pool("sim", max_concurrency=12, trace=store) as pool:
+        views = pool.shard_views(3)
+        for i, v in enumerate(views):
+            v.submit(lambda x: x, i).result()
+    # every shard owns its own segment; the merged view is one
+    # monotone timeline covering all events
+    per_seg = [len(seg) for seg in store.segments]
+    assert sum(per_seg) == len(store) > 0
+    assert all(n > 0 for n in per_seg)
+    ts = [e.t for e in store.iter_events()]
+    assert ts == sorted(ts)
+    kinds = [e.kind for e in store.events()]
+    assert "submit" in kinds and "complete" in kinds
+
+
+def test_sharded_trace_capacity_goes_to_segment_zero():
+    store = ShardedTraceStore(2, ring_size=64)
+    with make_pool("sim", max_concurrency=4, trace=store) as pool:
+        pool.resize(8)
+        pool.shard_views(2)[1].submit(lambda: 1).result()
+    cap_kinds = ("capacity_grow", "capacity_shrink")
+    assert any(e.kind in cap_kinds for e in store.segments[0].events())
+    assert not any(e.kind in cap_kinds
+                   for e in store.segments[1].events())
+
+
+def test_sharded_trace_bind_bounds():
+    store = ShardedTraceStore(2)
+    with pytest.raises(IndexError):
+        store.bind_shard(2)
+    with pytest.raises(IndexError):
+        store.bind_shard(-1)
+
+
+def test_sharded_driver_records_to_sharded_store():
+    store = ShardedTraceStore(4, ring_size=256)
+    with make_pool("sim", max_concurrency=32, trace=store) as pool:
+        r = run_irregular(pool, uts_spec(UTS_P), shards=4,
+                          batching=True, shape=TaskShape(8, 200))
+    assert r.output == uts_sequential(UTS_P)
+    assert len(store) > 0
+    assert sum(len(s) for s in store.segments) == len(store)
+    # analytics stay coherent on the merged view
+    assert store.counts().get("complete", 0) > 0
+    assert store.peak_concurrency() >= 1
+    store.close()
+
+
+# -- _TraceWindow fold cache --------------------------------------------------
+
+def test_trace_window_fold_is_cached_per_generation():
+    store = TraceStore(ring_size=4096)
+    with make_pool("sim", max_concurrency=8, trace=store) as pool:
+        pool.submit(lambda: 1).result()
+        win = store.tail(0)
+        calls = []
+        orig = store.iter_events
+
+        def counted(start=0):
+            calls.append(start)
+            return orig(start)
+
+        store.iter_events = counted
+        a = win.counts()
+        b = win.cold_starts()
+        c = win.span()
+        assert a and c is not None and b >= 0
+        assert len(calls) == 1          # one streamed pass, then cache
+        pool.submit(lambda: 2).result()  # growth invalidates
+        win.counts()
+        assert len(calls) == 2
+        win.counts()
+        assert len(calls) == 2
+        store.iter_events = orig
+    store.close()
+
+
+# -- windowed min-max decimation ----------------------------------------------
+
+def test_minmax_decimate_short_series_passthrough():
+    s = [(float(i), i) for i in range(10)]
+    assert _minmax_decimate(s, 5) == s  # 10 <= 2*5
+
+
+def test_minmax_decimate_preserves_envelope():
+    # sawtooth over 10k points: global min/max and per-bucket extremes
+    # must survive; output is bounded by 2 points per bucket
+    s = [(float(i), (i * 37) % 101 - (50 if i % 2 else 0))
+         for i in range(10_000)]
+    out = _minmax_decimate(s, 64)
+    assert len(out) <= 2 * 64
+    assert max(v for _, v in out) == max(v for _, v in s)
+    assert min(v for _, v in out) == min(v for _, v in s)
+    ts = [t for t, _ in out]
+    assert ts == sorted(ts)
+    assert out[0] == s[0] or out[0][0] >= s[0][0]
+
+
+def test_minmax_decimate_validates_buckets():
+    with pytest.raises(ValueError):
+        _minmax_decimate([(0.0, 1), (1.0, 2), (2.0, 3)], 0)
+
+
+def test_render_figure_honours_pixel_budget(tmp_path):
+    from repro.trace import render_concurrency_figure
+    store = TraceStore(ring_size=1 << 16)
+    with make_pool("sim", max_concurrency=64, trace=store) as pool:
+        run_irregular(pool, uts_spec(UTS_P), batching=True,
+                      shape=TaskShape(8, 200))
+    arts = render_concurrency_figure({"run": store},
+                                     str(tmp_path / "fig"),
+                                     pixel_budget=32)
+    assert "csv" in arts
+    rows = (tmp_path / "fig.csv").read_text().strip().splitlines()
+    # decimated: header + at most 2*32 points per series kind
+    assert 1 < len(rows) <= 1 + 2 * 2 * 32
+    store.close()

@@ -51,6 +51,9 @@ DRIFT_KEYS = (
     ("serving_knee", "slo_p99_ms"),
     ("serving_knee", "slo_provisioned_usd"),
     ("serving_knee", "slo_savings_pct"),
+    ("chaos_mortality", "makespan_tax_30_pct"),
+    ("chaos_mortality", "cost_tax_30_pct"),
+    ("chaos_mortality", "recovery_overhead_pct"),
 )
 #: wall-clock keys (real time, not virtual) gated at WALL_TOL — catches
 #: order-of-magnitude master-loop regressions without flaking on noise
@@ -72,6 +75,9 @@ INVARIANTS = (
     ("serving_knee", "replay_parity_ok"),
     ("master_throughput", "master_scaling_ok"),
     ("master_throughput", "identical_outputs"),
+    ("chaos_mortality", "chaos_identical_outputs"),
+    ("chaos_mortality", "resume_identical_outputs"),
+    ("chaos_mortality", "routing_beats_threshold"),
 )
 
 

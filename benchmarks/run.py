@@ -801,6 +801,215 @@ def fig_batch_fusion() -> None:
     emit("fig_batch_fusion", us, **derived)
 
 
+# -- Chaos: mortality tax, crash recovery, routing policies ----------------------
+
+def chaos_mortality() -> None:
+    """repro.chaos row (sim pool): the three fault-tolerance claims.
+
+    1. **Mortality invariant** — 10% / 30% container mortality on a
+       seeded ``FaultPlan`` leaves UTS / MS / BC outputs bit-identical
+       (``chaos_identical_outputs``); what mortality buys is a makespan
+       and cost *tax*, reported at 30%.
+    2. **Crash recovery** — the master is killed mid-run at a seeded
+       frontier depth (``kill_master_after``), the WAL journal is
+       recovered, and ``resume_from=`` completes the run bit-identically
+       (``resume_identical_outputs``) — including ``shards=3`` and
+       ``batching=True``.  ``recovery_overhead_pct`` is the re-executed
+       work: total tasks across killed + resumed runs over the
+       uninterrupted run's.
+    3. **Routing** — the deadline-aware ``CostPerDeadlinePolicy``
+       against the legacy static cost_hint ``ThresholdPolicy`` on a
+       bursty mixed-size stream (deterministic queueing model over the
+       provider's cold/warm expectations).  Metric: billed elastic
+       seconds per unit deadline-hit fraction — lower is better;
+       ``routing_beats_threshold`` gates that the policy object earns
+       its place.
+    """
+    from repro.chaos import (CostPerDeadlinePolicy, FaultPlan,
+                             LocalFirstPolicy, MasterKilledError,
+                             ThresholdPolicy, kill_master_after)
+
+    t0 = time.monotonic()
+    uts_p = UTSParams(seed=2, b0=3.0, max_depth=6)
+    uts_kw = dict(shape=TaskShape(split_factor=4, iters=50))
+    ms_p = MSParams(width=128, height=128, max_dwell=64, max_depth=4,
+                    initial_subdivision=4)
+    bc_p = RMATParams(scale=7, edge_factor=8, seed=2)
+
+    def run(spec, faults=None, **kw):
+        with make_pool("sim", max_concurrency=16, faults=faults) as pool:
+            return run_irregular(pool, spec, **kw)
+
+    cases = (
+        ("uts", lambda: uts_spec(uts_p), uts_kw,
+         lambda a, b: a == b),
+        ("ms", lambda: ms_spec(ms_p), {},
+         lambda a, b: bool(np.array_equal(a["image"], b["image"]))),
+        ("bc", lambda: bc_spec(bc_p, n_tasks=24), {},
+         lambda a, b: bool(np.array_equal(a, b))),
+    )
+    derived = {}
+    identical = True
+    makespan_tax = cost_tax = 0.0
+    bases = {}
+    for name, mk, kw, eq in cases:
+        base = run(mk(), **kw)
+        bases[name] = base
+        for pct in (10, 30):
+            plan = FaultPlan(seed=7, container_mortality=pct / 100)
+            r = run(mk(), faults=plan, **kw)
+            same = eq(r.output, base.output)
+            identical = identical and same
+            derived[f"{name}_identical_{pct}"] = bool(same)
+            if pct == 30:
+                derived[f"{name}_deaths_30"] = r.worker_deaths
+                if name == "uts":
+                    makespan_tax = (r.makespan_s / base.makespan_s
+                                    - 1.0) * 100
+                    cost_tax = (r.cost.total / base.cost.total
+                                - 1.0) * 100
+    derived["chaos_identical_outputs"] = bool(identical)
+    derived["makespan_tax_30_pct"] = round(makespan_tax, 1)
+    derived["cost_tax_30_pct"] = round(cost_tax, 1)
+
+    # -- master kill + WAL resume ------------------------------------
+    def kill_resume(mk, n_folds, eq, base, **kw):
+        pool = make_pool("sim", max_concurrency=16)
+        try:
+            run_irregular(pool, kill_master_after(mk(), n_folds),
+                          wal=True, **kw)
+            raise RuntimeError("injected master kill never fired")
+        except MasterKilledError:
+            pass
+        killed_tasks = pool.snapshot()["submitted"]
+        trace = pool.events
+        with make_pool("sim", max_concurrency=16) as pool2:
+            r = run_irregular(pool2, mk(), resume_from=trace, **kw)
+        pool.shutdown()
+        return bool(eq(r.output, base.output)), killed_tasks, r
+
+    resume_ok = True
+    for label, mk, kw, eq, base in (
+            ("uts", lambda: uts_spec(uts_p), uts_kw,
+             cases[0][3], bases["uts"]),
+            ("uts_shards", lambda: uts_spec(uts_p),
+             dict(uts_kw, shards=3), cases[0][3], bases["uts"]),
+            ("uts_batched", lambda: uts_spec(uts_p),
+             dict(uts_kw, batching=True), cases[0][3], bases["uts"]),
+            ("ms", lambda: ms_spec(ms_p), {}, cases[1][3], bases["ms"]),
+            ("bc", lambda: bc_spec(bc_p, n_tasks=24), {}, cases[2][3],
+             bases["bc"])):
+        same, killed_tasks, r = kill_resume(mk, 5, eq, base, **kw)
+        resume_ok = resume_ok and same
+        derived[f"resume_identical_{label}"] = same
+        if label == "uts":
+            overhead = ((killed_tasks + r.tasks)
+                        / max(1, bases["uts"].tasks) - 1.0) * 100
+            derived["recovery_overhead_pct"] = round(overhead, 1)
+            derived["recovered_tasks"] = r.recovered_tasks
+    derived["resume_identical_outputs"] = bool(resume_ok)
+
+    # -- routing policies on a bursty mixed-size stream --------------
+    provider = ProviderModel.aws_lambda()
+    deadline_s = 0.6
+    tasks = [(burst * 1.0, 0.4 if i % 2 else 0.05)
+             for burst in range(6) for i in range(8)]
+
+    def route_sim(policy):
+        class _Clk:
+            t = 0.0
+
+            def now(self):
+                return self.t
+
+        clk = _Clk()
+
+        class _Local:
+            max_concurrency = 4
+
+            def __init__(self):
+                self.ends = [0.0] * self.max_concurrency
+
+            def idle_capacity(self):
+                return sum(1 for e in self.ends if e <= clk.t)
+
+            def pending(self):
+                return 0
+
+        class _Fleet:
+            def __init__(self):
+                self.ends = []
+
+            def warm_count(self, now):
+                return sum(1 for e in self.ends
+                           if e <= now <= e + provider.keep_alive_s)
+
+        class _Elastic:
+            max_concurrency = 10_000
+
+            def __init__(self):
+                self.provider = provider
+                self._fleet = _Fleet()
+                self.clock = clk
+                self.invoke_overhead = provider.warm_overhead_s
+
+            def idle_capacity(self):
+                return self.max_concurrency
+
+            def pending(self):
+                return 0
+
+        class _SimHybrid:
+            """Duck-typed ``.local``/``.elastic`` surface — routing
+            policies read only the public pool attributes."""
+
+            def __init__(self):
+                self.local = _Local()
+                self.elastic = _Elastic()
+
+        h = _SimHybrid()
+        billed = hits = 0.0
+        for t_arr, hint in tasks:
+            clk.t = t_arr
+            body = hint  # alpha_s_per_cost = 1
+            route = getattr(policy, "route", None)
+            run_local = (route(h, cost_hint=hint) if route is not None
+                         else policy(h))
+            if run_local:
+                i = min(range(len(h.local.ends)),
+                        key=lambda j: h.local.ends[j])
+                end = max(t_arr, h.local.ends[i]) + body
+                h.local.ends[i] = end
+            else:
+                warm = h.elastic._fleet.warm_count(t_arr) > 0
+                oh = provider.overhead_s(cold=not warm)
+                end = t_arr + oh + body
+                h.elastic._fleet.ends.append(end)
+                billed += oh + body
+            hits += 1.0 if end - t_arr <= deadline_s else 0.0
+        hit_frac = hits / len(tasks)
+        return billed, hit_frac, billed / max(hit_frac, 1e-9)
+
+    policies = {
+        "threshold": ThresholdPolicy(cost_threshold=0.2),
+        "local_first": LocalFirstPolicy(),
+        "cost_per_deadline": CostPerDeadlinePolicy(
+            deadline_s=deadline_s, alpha_s_per_cost=1.0),
+    }
+    metrics = {}
+    for name, pol in policies.items():
+        billed, hit_frac, metric = route_sim(pol)
+        metrics[name] = metric
+        derived[f"route_{name}_billed_s"] = round(billed, 3)
+        derived[f"route_{name}_hit_frac"] = round(hit_frac, 3)
+        derived[f"route_{name}_metric"] = round(metric, 3)
+    derived["routing_beats_threshold"] = bool(
+        min(m for n, m in metrics.items() if n != "threshold")
+        < metrics["threshold"])
+
+    emit("chaos_mortality", (time.monotonic() - t0) * 1e6, **derived)
+
+
 # -- Roofline table (from the dry-run artifacts) ----------------------------------
 
 def roofline_from_dryrun() -> None:
@@ -847,6 +1056,7 @@ BENCHES = {
     "master_throughput": master_throughput,
     "trace_replay": trace_record_replay,
     "serving_knee": serving_knee,
+    "chaos_mortality": chaos_mortality,
     "roofline": roofline_from_dryrun,
 }
 

@@ -223,6 +223,11 @@ def bc_spec(
             out += partial
         return out
 
+    # WAL codecs (repro.chaos crash recovery): blocks key on their int
+    # ids; a partial's float values survive the JSON trip exactly
+    # (binary float -> shortest-repr decimal -> same binary float), so
+    # recovered runs stay bit-identical through ``finalize``'s
+    # canonical-order sum
     return WorkSpec(
         name="betweenness_centrality",
         execute=execute,
@@ -233,6 +238,11 @@ def bc_spec(
         finalize=finalize,
         merge=lambda a, b: a + b,
         cost_hint=lambda block: float(len(block)),
+        encode_item=lambda block: np.asarray(block).tolist(),
+        encode_result=lambda r: {"k": int(r[0]), "v": r[1].tolist(),
+                                 "dt": str(r[1].dtype)},
+        decode_result=lambda e: (e["k"],
+                                 np.asarray(e["v"], np.dtype(e["dt"]))),
     )
 
 

@@ -240,6 +240,34 @@ def ms_spec(p: MSParams) -> WorkSpec:
                 "filled": a["filled"] + b["filled"],
                 "evaluated": a["evaluated"] + b["evaluated"]}
 
+    # WAL codecs (repro.chaos crash recovery): rects key on their 5
+    # ints; results round-trip action + dwell payload exactly (dwells
+    # are int arrays, so the JSON trip is lossless)
+    def _enc_rect(r: Rect) -> list:
+        # rect bounds may be numpy ints (np.linspace grids): canonical
+        # keys need plain JSON ints
+        return [int(r.px0), int(r.py0), int(r.px1), int(r.py1),
+                int(r.depth)]
+
+    def encode_result(res: RectResult) -> dict:
+        enc: Dict[str, Any] = {"r": _enc_rect(res.rect),
+                               "a": res.action.value}
+        if res.action is Action.FILL:
+            enc["f"] = int(res.dwell_to_fill)
+        elif res.action is Action.SET_DWELL_ARRAY:
+            enc["w"] = res.dwell_array.tolist()
+            enc["dt"] = str(res.dwell_array.dtype)
+        return enc
+
+    def decode_result(enc: dict) -> RectResult:
+        rect = Rect(*enc["r"])
+        action = Action(enc["a"])
+        arr = (np.asarray(enc["w"], np.dtype(enc["dt"]))
+               if action is Action.SET_DWELL_ARRAY else None)
+        return RectResult(rect, action,
+                          dwell_to_fill=enc.get("f", 0),
+                          dwell_array=arr)
+
     return WorkSpec(
         name="mariani_silver",
         execute=execute,
@@ -250,6 +278,9 @@ def ms_spec(p: MSParams) -> WorkSpec:
         init=init,
         merge=merge,
         cost_hint=lambda rect: float(rect.w * rect.h),
+        encode_item=_enc_rect,
+        encode_result=encode_result,
+        decode_result=decode_result,
     )
 
 

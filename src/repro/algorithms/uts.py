@@ -232,6 +232,16 @@ def uts_spec(params: UTSParams) -> WorkSpec:
         _, leftover = result
         return _resize(leftover, shape) if leftover.size else []
 
+    # WAL codecs (repro.chaos crash recovery): a bag is exactly its
+    # digests + depths, both integer arrays, so the JSON round trip is
+    # lossless and the frontier key is canonical
+    def _enc_bag(bag: Bag) -> dict:
+        return {"d": bag.digests.tolist(), "p": bag.depths.tolist()}
+
+    def _dec_bag(enc: dict) -> Bag:
+        return Bag(np.asarray(enc["d"], np.uint32).reshape(5, -1),
+                   np.asarray(enc["p"], np.int32))
+
     return WorkSpec(
         name="uts",
         execute=execute,
@@ -244,6 +254,9 @@ def uts_spec(params: UTSParams) -> WorkSpec:
         # (shards=K) are bit-identical to the single master
         merge=lambda a, b: a + b,
         cost_hint=lambda bag: float(bag.size),
+        encode_item=_enc_bag,
+        encode_result=lambda r: {"c": int(r[0]), **_enc_bag(r[1])},
+        decode_result=lambda e: (e["c"], _dec_bag(e)),
         shape=TaskShape(split_factor=8, iters=50_000),
     )
 

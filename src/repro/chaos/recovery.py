@@ -1,0 +1,172 @@
+"""Master crash recovery from the trace spill — the WAL was already there.
+
+A killed *worker* is cheap: tasks are stateless, the executor retries.
+A killed *master* used to lose the run — the frontier and the partial
+accumulator live only in driver memory.  But every pool already
+journals its timeline, and with ``run_irregular(..., wal=True)`` the
+driver additionally lands one ``folded`` event per settled item — the
+item's canonical encoding plus its encoded result, emitted AFTER the
+fold is applied and BEFORE any children dispatch (write-ahead order).
+That makes the spilled :class:`~repro.trace.store.TraceStore` JSONL a
+complete write-ahead log, and recovery pure journal replay:
+
+* **partial accumulator** = ``spec.init()`` folded with ``spec.reduce``
+  over the journal's decoded results, in journal order;
+* **expected items** = ``spec.seed(...)`` plus ``spec.split`` of every
+  journaled result — every item the run would ever have known about;
+* **pending frontier** = expected minus folded (a multiset diff on the
+  items' canonical encodings — UTS bags repeat, so keys are counted).
+
+``run_irregular(pool, spec, resume_from=trace)`` then seeds from the
+recovered frontier and folds into the recovered partial; because the
+paper workloads' (reduce, merge, finalize) triples are
+order-insensitive, the resumed output is bit-identical to the unkilled
+run.  The spec only needs three codec hooks (``encode_item``,
+``encode_result``, ``decode_result``): items are never decoded — their
+encoding is just the matching key — so only results must round-trip
+exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+from ..core.adaptive import TaskShape
+from ..core.telemetry import FOLDED
+
+__all__ = ["FrontierRecovery", "recover_frontier", "MasterKilledError",
+           "kill_master_after"]
+
+
+class MasterKilledError(RuntimeError):
+    """The master (driver) process died mid-run — test/injection only;
+    a real master crash just disappears."""
+
+
+def canonical_key(encoded: Any) -> str:
+    """Stable string key for an encoded item (order-normalized JSON)."""
+    return json.dumps(encoded, sort_keys=True, separators=(",", ":"))
+
+
+@dataclass
+class FrontierRecovery:
+    """What :func:`recover_frontier` reconstructed from a WAL.
+
+    Iterable as ``(pending, partial)`` for tuple unpacking."""
+
+    #: un-folded work items, in discovery order (seeds first, then each
+    #: journaled result's children in journal order)
+    pending: List[Any] = field(default_factory=list)
+    #: accumulator state after replaying every journaled fold
+    partial: Any = None
+    #: journaled folds replayed
+    folded: int = 0
+
+    def __iter__(self):
+        return iter((self.pending, self.partial))
+
+
+def _require_codecs(spec: Any) -> None:
+    missing = [name for name in
+               ("encode_item", "encode_result", "decode_result")
+               if getattr(spec, name, None) is None]
+    if missing:
+        raise ValueError(
+            f"{spec.name}: recovery needs WAL codecs on the spec "
+            f"(missing {', '.join(missing)})")
+
+
+def recover_frontier(
+    trace: Any,
+    spec: Any,
+    *,
+    shape: Optional[TaskShape] = None,
+    initial_shape: Optional[TaskShape] = None,
+) -> FrontierRecovery:
+    """Reconstruct ``(pending_items, partial_accumulator)`` from a
+    WAL-bearing trace.
+
+    ``trace`` is anything event-shaped: a live ``TraceStore`` /
+    ``ShardedTraceStore`` / ``EventLog``, a :class:`TraceReader`, a
+    spill-file path, or a raw event iterable.  ``shape`` /
+    ``initial_shape`` must match the killed run's (they determine
+    ``seed`` and ``split`` fan-out); both default to ``spec.shape``.
+    """
+    from ..trace.store import iter_trace_events
+    _require_codecs(spec)
+    shape = shape or spec.shape
+    seed_shape = initial_shape or shape
+
+    if isinstance(trace, str):
+        from ..trace.store import read_trace
+        trace = read_trace(trace)
+
+    # a payload is one {"item", "result"} entry, or — for fused batch
+    # chunks / sharded gather waves, journaled atomically — a
+    # {"batch": [entry, ...]} of them
+    entries: List[dict] = []
+    for ev in iter_trace_events(trace):
+        if ev.kind != FOLDED or ev.payload is None:
+            continue
+        entries.extend(ev.payload.get("batch", [ev.payload])
+                       if isinstance(ev.payload, dict) else ())
+
+    # replay the journal: fold results in order, collect folded keys
+    partial = spec.init()
+    folded_keys: Counter = Counter()
+    results = []
+    for p in entries:
+        folded_keys[canonical_key(p["item"])] += 1
+        r = spec.decode_result(p["result"])
+        results.append(r)
+        partial = spec.reduce(partial, r)
+
+    # every item the run ever knew about: seeds + journaled children
+    expected: List[Any] = list(spec.seed(seed_shape))
+    for r in results:
+        expected.extend(spec.split(r, shape))
+
+    pending: List[Any] = []
+    for item in expected:
+        k = canonical_key(spec.encode_item(item))
+        if folded_keys.get(k, 0) > 0:
+            folded_keys[k] -= 1
+        else:
+            pending.append(item)
+
+    leftover = sum(folded_keys.values())
+    if leftover:
+        raise ValueError(
+            f"{spec.name}: WAL journals {leftover} fold(s) for items the "
+            f"replayed seed/split never produced — shape/initial_shape "
+            f"probably differ from the killed run's")
+    return FrontierRecovery(pending=pending, partial=partial,
+                            folded=len(entries))
+
+
+def kill_master_after(spec: Any, n_folds: int) -> Any:
+    """Test harness: a copy of ``spec`` whose master dies (raises
+    :class:`MasterKilledError`) when it attempts fold ``n_folds + 1``.
+
+    The first ``n_folds`` folds complete normally — and, under
+    ``wal=True``, are journaled — so a run driven with the returned
+    spec leaves exactly the WAL a real crash at that frontier depth
+    would.  The counter is shared across shards (the sharded driver
+    settles on one thread), so ``shards=K`` dies at the same global
+    depth as ``shards=1``.
+    """
+    inner = spec.reduce
+    count = [0]
+
+    def dying_reduce(state: Any, result: Any) -> Any:
+        if count[0] >= n_folds:
+            raise MasterKilledError(
+                f"{spec.name}: injected master kill after "
+                f"{n_folds} folds")
+        count[0] += 1
+        return inner(state, result)
+
+    return dataclasses.replace(spec, reduce=dying_reduce)

@@ -19,9 +19,10 @@ Backends and primitives:
     characterize, coefficient_of_variation
 """
 from .futures import (CompletionQueue, ElasticFuture, Task, TaskRecord,
-                      TaskState)
+                      TaskState, WorkerKilledError)
 from .telemetry import (Clock, Event, EventLog, VirtualClock, WallClock)
-from .provider import AutoscalePolicy, ContainerFleet, ProviderModel
+from .provider import (AutoscalePolicy, Backoff, ContainerFleet,
+                       ProviderModel)
 from .pool import (Pool, ShardView, make_pool, register_pool,
                    registered_pools)
 from .executor import (
@@ -60,9 +61,10 @@ __all__ = [
     "Pool", "ShardView", "make_pool", "register_pool",
     "registered_pools",
     "WorkSpec", "run_irregular", "IrregularResult",
-    "ProviderModel", "AutoscalePolicy", "ContainerFleet",
+    "ProviderModel", "AutoscalePolicy", "ContainerFleet", "Backoff",
     "Clock", "WallClock", "VirtualClock", "Event", "EventLog",
     "ElasticFuture", "Task", "TaskRecord", "TaskState", "CompletionQueue",
+    "WorkerKilledError",
     "BaseExecutor", "ElasticExecutor", "LocalExecutor", "HybridExecutor",
     "SimPool", "simulate_uts_pool",
     "ExecutorStats", "ConcurrencyTracker",

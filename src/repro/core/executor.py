@@ -52,11 +52,12 @@ import time
 from typing import Any, Callable, Iterable, Iterator, List, Optional
 
 from .futures import (CompletionQueue, ElasticFuture, Task, TaskRecord,
-                      TaskState)
+                      TaskState, WorkerKilledError)
 from .pool import Pool, register_pool
-from .provider import ContainerFleet, ProviderModel
-from .telemetry import (CAPACITY_GROW, CAPACITY_SHRINK, COLD_START,
-                        COMPLETE, REQUEUE, START, SUBMIT, Clock, EventLog)
+from .provider import Backoff, ContainerFleet, ProviderModel
+from .telemetry import (CANCEL, CAPACITY_GROW, CAPACITY_SHRINK,
+                        COLD_START, COMPLETE, REQUEUE, START, SUBMIT,
+                        THROTTLED, WORKER_KILLED, Clock, EventLog)
 
 __all__ = [
     "ConcurrencyTracker",
@@ -123,6 +124,9 @@ class ExecutorStats:
         self.peak_concurrency = 0
         self.invocations = 0  # billable invocations (includes retries)
         self.cold_starts = 0
+        self.worker_deaths = 0  # injected container kills (repro.chaos)
+        self.throttled = 0      # admission backoff episodes (storms)
+        self.cancelled = 0      # explicit future cancellations
         self.trackers: List[ConcurrencyTracker] = []
 
     @property
@@ -185,6 +189,34 @@ class ExecutorStats:
         with self._lock:
             self.retries += 1
 
+    def on_worker_killed(self, task_id: Optional[int] = None,
+                         worker: Optional[str] = None) -> None:
+        """An injected fault killed the attempt's container mid-task
+        (``repro.chaos``).  Informational — the slot itself is freed by
+        the paired :meth:`on_requeue` / :meth:`on_finish`, so the
+        concurrency series stays exact."""
+        with self._lock:
+            self.worker_deaths += 1
+        self.log.emit(WORKER_KILLED, task_id=task_id, worker=worker)
+
+    def on_throttled(self, task_id: Optional[int] = None,
+                     worker: Optional[str] = None) -> None:
+        """Admission hit a rate-limit storm and entered a backoff
+        episode (one event per episode, not per retry sleep)."""
+        with self._lock:
+            self.throttled += 1
+        self.log.emit(THROTTLED, task_id=task_id, worker=worker)
+
+    def on_cancel(self, task_id: Optional[int] = None,
+                  parent: Optional[int] = None) -> None:
+        """A pending future was explicitly cancelled (fail-fast sibling
+        cancel, ``Pool.map`` remainder-cancel).  ``parent`` is the
+        cancelling context's task id so replays can distinguish a
+        deliberate cancellation from a lost task."""
+        with self._lock:
+            self.cancelled += 1
+        self.log.emit(CANCEL, task_id=task_id, parent=parent)
+
     def on_resize(self, old: int, new: int) -> None:
         self.log.emit(CAPACITY_GROW if new > old else CAPACITY_SHRINK,
                       capacity=new)
@@ -200,6 +232,9 @@ class ExecutorStats:
                 "peak_concurrency": self.peak_concurrency,
                 "invocations": self.invocations,
                 "cold_starts": self.cold_starts,
+                "worker_deaths": self.worker_deaths,
+                "throttled": self.throttled,
+                "cancelled": self.cancelled,
             }
 
 
@@ -234,6 +269,7 @@ class BaseExecutor(Pool):
         seed: int = 0,
         name: Optional[str] = None,
         trace: Optional[EventLog] = None,
+        faults: Optional[Any] = None,
     ) -> None:
         if max_concurrency <= 0:
             raise ValueError("max_concurrency must be positive")
@@ -252,8 +288,15 @@ class BaseExecutor(Pool):
         # repro.trace.TraceStore, which spills to JSONL and keeps only a
         # ring of events resident (million-event runs)
         self.stats = ExecutorStats(log=trace)
+        # faults: a repro.chaos.FaultPlan (duck-typed — core never
+        # imports chaos).  Bound per pool so concurrent pools sharing
+        # one plan draw independent decision streams.
+        self._chaos = faults.bind() if faults is not None else None
         self._fleet = (ContainerFleet(provider)
                        if provider is not None else None)
+        # seeded-jitter backoff for admission waits (ramp + storms);
+        # only ever advanced under _admit_lock, so one stream suffices
+        self._backoff = Backoff(base_s=1e-4, cap_s=0.05, seed=seed)
         self._admit_lock = threading.Lock()
         self._ramp_t0: Optional[float] = None
         self._queue: "queue.Queue" = queue.Queue()
@@ -362,14 +405,28 @@ class BaseExecutor(Pool):
             now = time.monotonic()
             if self._ramp_t0 is None:
                 self._ramp_t0 = now
+            throttled = False
             while not self._shutdown:
+                elapsed = time.monotonic() - self._ramp_t0
                 allowed = min(
                     self.max_concurrency,
-                    self.provider.allowed_concurrency(
-                        time.monotonic() - self._ramp_t0))
-                if self.stats.active < allowed:
+                    self.provider.allowed_concurrency(elapsed))
+                # injected rate-limit storm (repro.chaos): admission is
+                # refused for the window regardless of the ramp.  Storm
+                # windows are in pool time = seconds since first use.
+                storm = (self._chaos.storm_until(elapsed)
+                         if self._chaos is not None else None)
+                if storm is None and self.stats.active < allowed:
                     break
-                time.sleep(1e-4)
+                if storm is not None and not throttled:
+                    # one event per backoff episode, not per sleep
+                    self.stats.on_throttled(task.task_id, worker)
+                    throttled = True
+                # seeded exponential backoff with jitter instead of the
+                # old fixed 100 us hot-spin — storms converge instead
+                # of burning a core (ISSUE 8 satellite)
+                time.sleep(self._backoff.next())
+            self._backoff.reset()
             cid, cold = self._fleet.acquire(time.monotonic())
             if cold:
                 self.stats.on_cold_start(task.task_id, worker)
@@ -386,16 +443,35 @@ class BaseExecutor(Pool):
         task.attempts += 1
         overhead = (self.provider.overhead_s(cold) if self.provider
                     else self.invoke_overhead)
+        if cold and self._chaos is not None:
+            # injected cold-start inflation (slow AZ, image-pull storm)
+            overhead += self._chaos.extra_cold_start(self.provider)
         if overhead > 0:
             time.sleep(overhead)
         try:
             if self.failure_rate > 0 and self._next_rand() < self.failure_rate:
                 raise RuntimeError(f"injected worker failure on {worker}")
+            if self._chaos is not None and self._chaos.kills_attempt(
+                    batch=getattr(task.fn, "_repro_is_batch", False)):
+                raise WorkerKilledError(
+                    f"injected container death on {worker}")
             result = task.run()
         except BaseException as exc:  # noqa: BLE001 — report any failure
             task.end_time = time.monotonic()
-            self._release(cid)
-            if task.attempts < self.max_attempts:
+            killed = isinstance(exc, WorkerKilledError)
+            if killed:
+                # the whole container died: it never rejoins the fleet,
+                # so the task's next attempt acquires cold
+                self.stats.on_worker_killed(task.task_id, worker)
+            else:
+                self._release(cid)
+            # injected kills retry on their own (deep) budget so N%
+            # mortality alone can never exhaust a task into a terminal
+            # failure — the chaos headline invariant
+            budget = (self._chaos.retry_budget
+                      if killed and self._chaos is not None
+                      else self.max_attempts)
+            if task.attempts < budget:
                 # stateless ⇒ safe to re-invoke (paper §3.3); transient,
                 # so it counts as a retry, not a failure
                 self.stats.on_retry()

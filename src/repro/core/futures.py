@@ -34,6 +34,18 @@ class TaskState(Enum):
     CANCELLED = "cancelled"
 
 
+class WorkerKilledError(RuntimeError):
+    """A worker (container) died mid-task.
+
+    Raised inside an executing attempt by fault injection
+    (``repro.chaos.FaultPlan``) and surfaced to the caller only when a
+    task exhausts its kill-retry budget — under a plan's default budget
+    the task is transparently re-executed on a fresh container, which
+    is exactly the statelessness guarantee (paper §3.3) that makes
+    re-dispatch safe.
+    """
+
+
 class ElasticFuture:
     """Result handle for a submitted task (paper's ``Future<T>``)."""
 

@@ -48,8 +48,9 @@ class HybridExecutor(Pool):
         *,
         local_concurrency: int = 8,
         elastic_concurrency: int = 1000,
-        policy: Optional[Callable[["HybridExecutor"], bool]] = None,
+        policy: Optional[Any] = None,
         trace=None,
+        faults=None,
     ) -> None:
         # a caller-supplied trace backend (repro.trace.TraceStore) is
         # SHARED by both sub-pools: their lifecycles interleave on one
@@ -67,11 +68,19 @@ class HybridExecutor(Pool):
             raise ValueError(
                 "trace= applies only to sub-pools the hybrid constructs "
                 "itself; pre-built pools already own their logs")
+        # faults (a repro.chaos.FaultPlan) applies to sub-pools the
+        # hybrid constructs itself, like trace=; pre-built pools carry
+        # their own
         self.local = local or LocalExecutor(local_concurrency,
-                                            trace=trace)
+                                            trace=trace, faults=faults)
         self.elastic = elastic or ElasticExecutor(elastic_concurrency,
-                                                  trace=trace)
-        # policy(hybrid) -> True to run locally. Default = paper's rule.
+                                                  trace=trace,
+                                                  faults=faults)
+        # Placement policy, chosen per task: either a
+        # repro.chaos.routing.RoutingPolicy (object with
+        # ``route(hybrid, cost_hint=...) -> bool``, True = local) or a
+        # legacy plain callable ``policy(hybrid) -> bool``.
+        # Default = paper's Listing-1 rule.
         self._policy = policy or (lambda h: h.local.idle_capacity() > 0)
         self._lock = threading.Lock()
         self._submitted: List[ElasticFuture] = []
@@ -93,7 +102,13 @@ class HybridExecutor(Pool):
         if fn is None:
             raise TypeError("task must not be None")
         with self._lock:  # placement decision must see a consistent view
-            run_local = self._policy(self)
+            route = getattr(self._policy, "route", None)
+            if route is not None:
+                # first-class RoutingPolicy: per-task decision with the
+                # task's cost_hint in hand
+                run_local = route(self, cost_hint=cost_hint)
+            else:
+                run_local = self._policy(self)  # legacy plain callable
             pool: BaseExecutor = self.local if run_local else self.elastic
             f = pool.submit(fn, *args, cost_hint=cost_hint, **kwargs)
             self._submitted.append(f)
@@ -191,6 +206,18 @@ class _CombinedStats:
         return self._a.cold_starts + self._b.cold_starts
 
     @property
+    def worker_deaths(self):
+        return self._a.worker_deaths + self._b.worker_deaths
+
+    @property
+    def throttled(self):
+        return self._a.throttled + self._b.throttled
+
+    @property
+    def cancelled(self):
+        return self._a.cancelled + self._b.cancelled
+
+    @property
     def peak_concurrency(self):
         if self._tracker is not None:
             # true combined peak via the shared notification layer
@@ -208,5 +235,8 @@ class _CombinedStats:
             "active": self.active,
             "invocations": self.invocations,
             "cold_starts": self.cold_starts,
+            "worker_deaths": self.worker_deaths,
+            "throttled": self.throttled,
+            "cancelled": self.cancelled,
             "peak_concurrency": self.peak_concurrency,
         }

@@ -34,7 +34,7 @@ from .costmodel import CostReport, serverless_cost
 from .futures import CompletionQueue, ElasticFuture, TaskState
 from .pool import Pool
 from .provider import AutoscalePolicy
-from .telemetry import PARENT_ROOT
+from .telemetry import FOLDED, PARENT_ROOT, REQUEUE, WORKER_KILLED
 
 __all__ = ["WorkSpec", "IrregularResult", "run_irregular"]
 
@@ -87,6 +87,17 @@ class WorkSpec:
     #: ``run_irregular(..., batching=True)``.
     execute_batch: Optional[
         Callable[[List[Any], TaskShape], List[Any]]] = None
+    #: WAL codecs (master crash recovery, ``repro.chaos``).
+    #: ``encode_item`` maps a work item to a JSON-able value used as a
+    #: canonical *matching key* — it is never decoded, so it only needs
+    #: to be injective, not invertible.  ``encode_result`` /
+    #: ``decode_result`` must round-trip a result exactly (bit-for-bit
+    #: for array payloads): recovery re-folds journaled results with
+    #: ``reduce``, and ``resume_from=`` is bit-identical only if the
+    #: replayed results are.
+    encode_item: Optional[Callable[[Any], Any]] = None
+    encode_result: Optional[Callable[[Any], Any]] = None
+    decode_result: Optional[Callable[[Any], Any]] = None
     #: default task shape (split_factor, iters) when none is passed
     shape: TaskShape = TaskShape(1, 1)
 
@@ -125,6 +136,14 @@ class IrregularResult:
     shards: int = 1
     #: work-stealing transfers between shards (sharded driver only)
     steals: int = 0
+    #: transient attempts requeued for retry (timeline ``requeue``
+    #: count — derived like ``cold_starts``)
+    retries: int = 0
+    #: injected container deaths survived (timeline ``worker_killed``)
+    worker_deaths: int = 0
+    #: frontier items reconstructed from the WAL when the run was
+    #: started with ``resume_from=`` (0 on a fresh run)
+    recovered_tasks: int = 0
 
     @property
     def throughput(self) -> float:
@@ -136,11 +155,27 @@ class IrregularResult:
 
 
 @dataclass
+class _ChunkWal:
+    """Journal accumulator for one fused batch: a fused carrier banks
+    the whole chunk's work on slot 0 (slots 1+ return neutral results),
+    so per-slot WAL entries would let a crash land between them and
+    leave a journal whose partial chunk double-counts on resume.  The
+    chunk's folds are therefore journaled as ONE atomic ``folded``
+    event, emitted only once every slot has folded — a crash before
+    that leaves the whole chunk pending, and re-running it re-derives
+    the same results."""
+
+    size: int
+    entries: List[dict] = field(default_factory=list)
+
+
+@dataclass
 class _Dispatch:
     item: Any
     shape: TaskShape
     issued_at: float
     speculated: bool = False
+    chunk: Optional[_ChunkWal] = None
 
 
 def run_irregular(
@@ -156,6 +191,8 @@ def run_irregular(
     batching: Optional[bool] = None,
     arrivals: Optional[Iterable[Tuple[float, Any]]] = None,
     shards: Optional[int] = None,
+    resume_from: Optional[Any] = None,
+    wal: Optional[bool] = None,
 ) -> IrregularResult:
     """Drive ``spec`` over ``pool`` to completion.
 
@@ -225,6 +262,24 @@ def run_irregular(
                           order-insensitive (all three paper workloads
                           are).  Incompatible with ``controller``,
                           ``speculative_deadline`` and ``arrivals``.
+    resume_from           a WAL-bearing trace from a killed master (a
+                          ``TraceStore``/``EventLog``, spill-file path,
+                          or event iterable): the frontier and partial
+                          accumulator are reconstructed via
+                          ``repro.chaos.recover_frontier`` and the run
+                          continues from there — for order-insensitive
+                          specs the resumed output is bit-identical to
+                          the unkilled run.  Requires the spec's WAL
+                          codecs and fixed shapes (no ``controller``);
+                          implies ``wal=True`` so the resumed run's
+                          trace is itself recoverable.
+    wal                   journal one ``folded`` event (encoded item +
+                          result) on the pool's timeline per settled
+                          item, AFTER the fold and BEFORE its children
+                          dispatch — the write-ahead order that makes
+                          the trace spill a crash-recovery log.
+                          Default: ``True`` iff ``resume_from`` is
+                          given.
     """
     if shards is not None and shards > 1:
         if controller is not None:
@@ -247,14 +302,23 @@ def run_irregular(
         return _run_sharded(pool, spec, shards=shards, shape=shape,
                             initial_shape=initial_shape,
                             autoscale=autoscale, timeout=timeout,
-                            batching=batching)
+                            batching=batching, resume_from=resume_from,
+                            wal=wal)
     t0 = time.monotonic()
     shape = shape or spec.shape
     if batching and spec.execute_batch is None:
         raise ValueError(
             f"{spec.name}: batching=True requires spec.execute_batch")
     batching = bool(batching)
+    wal = (resume_from is not None) if wal is None else bool(wal)
+    if resume_from is not None and controller is not None:
+        raise ValueError(
+            f"{spec.name}: resume_from= needs fixed shapes (the WAL "
+            f"replays seed/split at known shapes) — controller= is "
+            f"incompatible")
+    wal_log = _wal_log(pool, spec) if wal else None
     state = spec.init()
+    recovered = 0
     cq = CompletionQueue()
     outstanding: Dict[ElasticFuture, _Dispatch] = {}
     n_dispatched = 0
@@ -305,8 +369,11 @@ def run_irregular(
                 cost_hints=[spec.cost_hint(item) for item in chunk],
                 parent=parent)
             now = time.monotonic()
+            chunk_wal = (_ChunkWal(len(chunk)) if wal_log is not None
+                         and len(chunk) > 1 else None)
             for f, item in zip(futures, chunk):
-                outstanding[f] = _Dispatch(item, shp, now)
+                outstanding[f] = _Dispatch(item, shp, now,
+                                           chunk=chunk_wal)
                 cq.add(f)
                 n_dispatched += 1
 
@@ -330,6 +397,21 @@ def run_irregular(
                 f"{spec.name}: arrivals= needs a virtual-time pool "
                 f"exposing run_until (got {type(pool).__name__})")
         pending_arrivals = deque(sorted(arrivals, key=lambda a: a[0]))
+        if resume_from is not None:
+            raise ValueError(
+                f"{spec.name}: resume_from= is incompatible with "
+                f"arrivals= (open-loop release times are not "
+                f"journaled)")
+    elif resume_from is not None:
+        from ..chaos.recovery import recover_frontier
+        rec = recover_frontier(resume_from, spec, shape=shape,
+                               initial_shape=initial_shape)
+        state = rec.partial
+        recovered = len(rec.pending)
+        # recovered items dispatch at the steady shape: the paper
+        # specs' outputs are granularity-insensitive, the same
+        # property shards=K bit-identity rests on
+        dispatch_ready(list(rec.pending), shape, parent=PARENT_ROOT)
     else:
         dispatch_ready(list(spec.seed(initial_shape or shape)),
                        initial_shape or shape, parent=PARENT_ROOT)
@@ -443,11 +525,28 @@ def run_irregular(
             # deadlines on the completion path too, not only when idle
             scan_stragglers()
         for f in batch:
-            outstanding.pop(f)
-            state = spec.reduce(state, f.result())
+            d = outstanding.pop(f)
+            result = f.result()
+            state = spec.reduce(state, result)
+            if wal_log is not None:
+                # WAL order: journal AFTER the fold applies and BEFORE
+                # any child dispatch — recovery replays exactly the
+                # folds that happened and re-derives everything else.
+                # Fused-batch slots accumulate into one atomic entry
+                # (see _ChunkWal)
+                entry = {"item": spec.encode_item(d.item),
+                         "result": spec.encode_result(result)}
+                if d.chunk is None:
+                    wal_log.emit(FOLDED, task_id=f._task.task_id,
+                                 payload=entry)
+                else:
+                    d.chunk.entries.append(entry)
+                    if len(d.chunk.entries) == d.chunk.size:
+                        wal_log.emit(FOLDED, task_id=f._task.task_id,
+                                     payload={"batch": d.chunk.entries})
             if controller is not None:
                 shape = controller.update(len(outstanding))
-            dispatch_ready(list(spec.split(f.result(), shape)), shape,
+            dispatch_ready(list(spec.split(result, shape)), shape,
                            parent=f._task.task_id)
             if observe_completion is not None:
                 # latency-targeting policies (SLO autoscale) consume
@@ -473,6 +572,7 @@ def run_irregular(
     makespan = (vt - vt0) if vt is not None else wall
     cost = None
     cold_starts = snap.get("cold_starts", 0)
+    retries = worker_deaths = 0
     concurrency_series: List[tuple] = []
     capacity_series: List[tuple] = []
     if has_events:
@@ -489,6 +589,9 @@ def run_irregular(
         concurrency_series = window.concurrency_series()
         capacity_series = window.capacity_series()
         cold_starts = window.cold_starts()
+        ev_counts = window.counts()
+        retries = ev_counts.get(REQUEUE, 0)
+        worker_deaths = ev_counts.get(WORKER_KILLED, 0)
     return IrregularResult(
         output=spec.finalize(state),
         wall_time_s=wall,
@@ -504,6 +607,9 @@ def run_irregular(
         cold_starts=cold_starts,
         autoscale_decisions=(list(autoscale.resize_log)
                              if autoscale is not None else []),
+        retries=retries,
+        worker_deaths=worker_deaths,
+        recovered_tasks=recovered,
     )
 
 
@@ -543,6 +649,24 @@ def _tree_merge(states: List[Any],
     return states[0]
 
 
+def _wal_log(pool: Pool, spec: WorkSpec):
+    """The log WAL ``folded`` events journal to: the pool's own
+    single-writer log (a spill-backed ``TraceStore`` persists them; a
+    plain ``EventLog`` keeps them queryable in memory).  Validates the
+    spec's WAL codecs up front."""
+    if spec.encode_item is None or spec.encode_result is None:
+        raise ValueError(
+            f"{spec.name}: wal=True requires encode_item/encode_result "
+            f"codecs on the spec")
+    log = getattr(getattr(pool, "stats", None), "log", None)
+    if log is None:
+        log = getattr(pool, "events", None)
+    if log is None:
+        raise ValueError(
+            f"{spec.name}: wal=True needs a pool with an event log")
+    return log
+
+
 def _run_sharded(
     pool: Pool,
     spec: WorkSpec,
@@ -553,6 +677,8 @@ def _run_sharded(
     autoscale: Optional[AutoscalePolicy],
     timeout: Optional[float],
     batching: Optional[bool],
+    resume_from: Optional[Any] = None,
+    wal: Optional[bool] = None,
 ) -> IrregularResult:
     """K-master sharded drive behind ``run_irregular(shards=K)``.
 
@@ -576,21 +702,36 @@ def _run_sharded(
         raise ValueError(
             f"{spec.name}: batching=True requires spec.execute_batch")
     batching = bool(batching)
+    wal = (resume_from is not None) if wal is None else bool(wal)
+    wal_log = _wal_log(pool, spec) if wal else None
     K = shards
     views = pool.shard_views(K)
     # frontier entries: (item, shape, parent_task_id)
     frontiers: List[deque] = [deque() for _ in range(K)]
     states: List[Any] = [spec.init() for _ in range(K)]
+    recovered_partial = None
+    recovered = 0
     cq = CompletionQueue()
-    # future -> (shard, slots_held, is_gather)
-    owner: Dict[ElasticFuture, Tuple[int, int, bool]] = {}
+    # future -> (shard, slots_held, is_gather, items)
+    owner: Dict[ElasticFuture, Tuple[int, int, bool, List[Any]]] = {}
     inflight = [0] * K
     n_dispatched = 0
     steals = 0
 
     seed_shape = initial_shape or shape
-    for i, item in enumerate(spec.seed(seed_shape)):
-        frontiers[i % K].append((item, seed_shape, PARENT_ROOT))
+    if resume_from is not None:
+        from ..chaos.recovery import recover_frontier
+        rec = recover_frontier(resume_from, spec, shape=shape,
+                               initial_shape=initial_shape)
+        # the journal's partial joins as one extra accumulator at the
+        # tree-merge; pending items round-robin like a fresh seed
+        recovered_partial = rec.partial
+        recovered = len(rec.pending)
+        for i, item in enumerate(rec.pending):
+            frontiers[i % K].append((item, shape, PARENT_ROOT))
+    else:
+        for i, item in enumerate(spec.seed(seed_shape)):
+            frontiers[i % K].append((item, seed_shape, PARENT_ROOT))
 
     # per-run windows — same capture as the single-master path
     has_events = getattr(pool, "events", None) is not None
@@ -658,7 +799,7 @@ def _run_sharded(
                     # waves hold one per item
                     held = (1 if pool.supports_batching
                             else len(items))
-                    owner[f] = (s, held, True)
+                    owner[f] = (s, held, True, items)
                     inflight[s] += held
                     cq.add(f)
                     n_dispatched += len(items)
@@ -669,22 +810,35 @@ def _run_sharded(
             f = view.submit(spec.execute, item, shp,
                             cost_hint=spec.cost_hint(item),
                             parent=parent)
-            owner[f] = (s, 1, False)
+            owner[f] = (s, 1, False, [item])
             inflight[s] += 1
             cq.add(f)
             n_dispatched += 1
 
     def settle(f: ElasticFuture) -> None:
-        s, held, is_gather = owner.pop(f)
+        s, held, is_gather, its = owner.pop(f)
         inflight[s] -= held
         results = f.result() if is_gather else [f.result()]
         parent_id = f._task.task_id
         st = states[s]
         fr = frontiers[s]
-        for r in results:
+        children: List[Any] = []
+        entries: List[dict] = []
+        for item, r in zip(its, results):
             st = spec.reduce(st, r)
-            for child in spec.split(r, shape):
-                fr.append((child, shape, parent_id))
+            if wal_log is not None:
+                entries.append({"item": spec.encode_item(item),
+                                "result": spec.encode_result(r)})
+            children.extend(spec.split(r, shape))
+        if entries:
+            # the gather journals atomically (fused carriers bank the
+            # whole wave's work on slot 0 — see _ChunkWal) and BEFORE
+            # its children queue, preserving the WAL order
+            payload = (entries[0] if len(entries) == 1
+                       else {"batch": entries})
+            wal_log.emit(FOLDED, task_id=parent_id, payload=payload)
+        for child in children:
+            fr.append((child, shape, parent_id))
         states[s] = st
 
     while True:
@@ -724,6 +878,7 @@ def _run_sharded(
     cold_starts = snap.get("cold_starts", 0)
     concurrency_series: List[tuple] = []
     capacity_series: List[tuple] = []
+    retries = worker_deaths = 0
     if has_events:
         log = pool.events
         window = (log if _prefix_is_capacity_only(log, events_start)
@@ -733,8 +888,15 @@ def _run_sharded(
         concurrency_series = window.concurrency_series()
         capacity_series = window.capacity_series()
         cold_starts = window.cold_starts()
+        ev_counts = window.counts()
+        retries = ev_counts.get(REQUEUE, 0)
+        worker_deaths = ev_counts.get(WORKER_KILLED, 0)
+    merged = _tree_merge(list(states), spec.merge)
+    if recovered_partial is not None:
+        # the pre-crash journal joins as one extra shard accumulator
+        merged = spec.merge(recovered_partial, merged)
     return IrregularResult(
-        output=spec.finalize(_tree_merge(list(states), spec.merge)),
+        output=spec.finalize(merged),
         wall_time_s=wall,
         tasks=n_dispatched,
         peak_concurrency=snap.get("peak_concurrency", 0),
@@ -749,6 +911,9 @@ def _run_sharded(
                              if autoscale is not None else []),
         shards=K,
         steals=steals,
+        retries=retries,
+        worker_deaths=worker_deaths,
+        recovered_tasks=recovered,
     )
 
 

@@ -120,11 +120,30 @@ class Pool(abc.ABC):
                 unsettled -= 1
                 if first_exc is None and f.state is TaskState.FAILED:
                     first_exc = f._exc
-                    for g in futures:
-                        g.cancel()  # no-op on settled/running futures
+                    # no-op on settled/running futures; each future
+                    # actually cancelled lands a typed cancel event
+                    self._cancel_pending(futures,
+                                         parent=f._task.task_id)
         if first_exc is not None:
             raise first_exc
         return [f.result() for f in futures]
+
+    def _cancel_pending(self, futures: Sequence[ElasticFuture],
+                        parent: Optional[int] = None) -> int:
+        """Cancel every not-yet-started future, stamping a ``cancel``
+        timeline event (with the cancelling context's task id as
+        ``parent``) per future actually cancelled — so replay /
+        ``extract_workload`` see a deliberate cancellation, not a lost
+        task.  Settled and running futures are untouched.  Returns how
+        many were cancelled."""
+        cb = getattr(self.stats, "on_cancel", None)
+        n = 0
+        for f in futures:
+            if f.cancel():
+                n += 1
+                if cb is not None:
+                    cb(f._task.task_id, parent)
+        return n
 
     def _make_future(self, task: Task) -> ElasticFuture:
         """Future constructor hook — virtual-time pools override this so
@@ -176,8 +195,7 @@ class Pool(abc.ABC):
                 # futures already submitted: cancel what never started
                 # (stateless tasks — running ones just finish into the
                 # stats log) before surfacing the error
-                for f in futures:
-                    f.cancel()
+                self._cancel_pending(futures, parent=parent)
                 raise
             return futures
 
@@ -191,6 +209,10 @@ class Pool(abc.ABC):
 
         def carrier() -> List[Any]:
             return batch_fn(items)
+        # batch-carrier marker read by fault injectors (kill_batch_rate
+        # targets fused carriers; set on the fn because sim pools start
+        # the task synchronously inside submit)
+        carrier._repro_is_batch = True
 
         def fan_out(f: ElasticFuture) -> None:
             if f.state is TaskState.FAILED:
@@ -270,6 +292,7 @@ class Pool(abc.ABC):
                         f"got {got}")
                 return list(results)
 
+            carrier._repro_is_batch = True  # fault injectors' marker
             return self.submit(carrier, cost_hint=float(sum(hints)),
                                parent=parent)
 
@@ -283,8 +306,7 @@ class Pool(abc.ABC):
                 children.append(self.submit(item_fn, item, cost_hint=h,
                                             parent=parent))
         except BaseException:
-            for f in children:
-                f.cancel()
+            self._cancel_pending(children, parent=parent)
             raise
         gather = self._make_future(Task(fn=None,
                                         cost_hint=float(sum(hints))))
@@ -293,8 +315,10 @@ class Pool(abc.ABC):
 
         def on_child(f: ElasticFuture) -> None:
             if f.state is TaskState.FAILED:
-                for c in children:
-                    c.cancel()  # no-op on settled/running futures
+                # fail-fast sibling cancel, stamped on the timeline
+                # with the failing task as parent (no-op on settled/
+                # running futures)
+                self._cancel_pending(children, parent=f._task.task_id)
                 gather._set_exception(f._exc)  # first settlement wins
             elif f.state is TaskState.CANCELLED:
                 gather._set_exception(

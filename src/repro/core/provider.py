@@ -37,7 +37,56 @@ import threading
 from dataclasses import dataclass, replace
 from typing import List, Optional, Tuple
 
-__all__ = ["ProviderModel", "ContainerFleet", "AutoscalePolicy"]
+__all__ = ["ProviderModel", "ContainerFleet", "AutoscalePolicy",
+           "Backoff"]
+
+
+class Backoff:
+    """Seeded exponential backoff with jitter for admission retries.
+
+    The elastic admission path used to hot-spin at a fixed 100 us poll
+    while the provider ramp (or an injected rate-limit storm) withheld
+    capacity.  ``next()`` returns the wait before the n-th retry of one
+    episode: ``min(cap_s, base_s * factor**n)`` scaled by a uniform
+    jitter in ``[0.5, 1.0)`` ("equal jitter" — decorrelates herds of
+    blocked submitters without ever collapsing the wait to zero).
+    ``reset()`` ends the episode once admission succeeds.
+
+    Jitter comes from a private xorshift64* stream seeded at
+    construction, so a given pool's admission schedule is reproducible
+    run to run — storm-injection tests converge deterministically.
+    """
+
+    def __init__(self, base_s: float = 1e-4, cap_s: float = 0.05,
+                 factor: float = 2.0, seed: int = 0) -> None:
+        self.base_s = base_s
+        self.cap_s = cap_s
+        self.factor = factor
+        self._state = (seed * 2654435761 + 0x9E3779B97F4A7C15) \
+            & 0xFFFFFFFFFFFFFFFF or 0x9E3779B97F4A7C15
+        self._n = 0
+
+    def _uniform(self) -> float:
+        x = self._state
+        x ^= (x << 13) & 0xFFFFFFFFFFFFFFFF
+        x ^= x >> 7
+        x ^= (x << 17) & 0xFFFFFFFFFFFFFFFF
+        self._state = x
+        return ((x * 0x2545F4914F6CDD1D) & 0xFFFFFFFFFFFFFFFF) / 2.0**64
+
+    def next(self) -> float:
+        """Wait (seconds) before the next retry of the current episode."""
+        raw = min(self.cap_s, self.base_s * self.factor ** self._n)
+        self._n += 1
+        return raw * (0.5 + 0.5 * self._uniform())
+
+    def reset(self) -> None:
+        """Admission succeeded — the next episode starts from base."""
+        self._n = 0
+
+    @property
+    def attempt(self) -> int:
+        return self._n
 
 
 @dataclass(frozen=True)

@@ -49,7 +49,7 @@ from typing import Any, Callable, List, Optional, Tuple
 
 from .adaptive import StagedController, TaskShape
 from .executor import ExecutorStats, FunctionThrottledError
-from .futures import ElasticFuture, Task, TaskRecord
+from .futures import ElasticFuture, Task, TaskRecord, WorkerKilledError
 from .pool import Pool, register_pool
 from .provider import ContainerFleet, ProviderModel
 from .telemetry import VirtualClock
@@ -113,6 +113,7 @@ class SimPool(Pool):
         throttle_mode: str = "queue",  # "queue" | "reject"
         name: Optional[str] = None,
         trace=None,
+        faults: Optional[Any] = None,
     ) -> None:
         if max_concurrency <= 0:
             raise ValueError("max_concurrency must be positive")
@@ -134,10 +135,15 @@ class SimPool(Pool):
             self.stats = ExecutorStats(log=trace)
         else:
             self.stats = ExecutorStats(clock=self.clock)
+        # faults: a repro.chaos.FaultPlan (duck-typed; bound per pool).
+        # Kill decisions are drawn per virtual start in deterministic
+        # order, so a seeded sim run has the same fault schedule — and
+        # therefore the same makespan/cost — on every execution.
+        self._chaos = faults.bind() if faults is not None else None
         self._fleet = (ContainerFleet(provider)
                        if provider is not None else None)
-        # (end_vt, seq, container id, entry)
-        self._heap: List[Tuple[float, int, int, tuple]] = []
+        # (end_vt, seq, container id, entry, killed)
+        self._heap: List[Tuple[float, int, int, tuple, bool]] = []
         self._waiting: deque = deque()
         self._seq = itertools.count()
         self._shutdown = False
@@ -261,33 +267,80 @@ class SimPool(Pool):
     def _start(self, entry: tuple) -> None:
         future, task, result, exc, body_dur = entry
         now = self.clock.now()
-        task.start_time = now
+        start_t = now
+        if self._chaos is not None:
+            # injected rate-limit storm: admission waits out the window
+            # (un-billed queueing — the attempt is not RUNNING during
+            # the wait), recorded as one throttled event
+            delay = self._chaos.storm_delay(now)
+            if delay > 0.0:
+                self.stats.on_throttled(task.task_id, self.name)
+                start_t = now + delay
+        task.start_time = start_t
         task.worker = self.name
         cold = False
         cid = -1
         if self._fleet is not None:
-            cid, cold = self._fleet.acquire(now)
+            cid, cold = self._fleet.acquire(start_t)
             task.worker = f"{self.name}-c{cid}"
             if cold:
                 self.stats.on_cold_start(task.task_id, task.worker)
         overhead = (self.provider.overhead_s(cold)
                     if self.provider is not None else self.invoke_overhead)
+        if cold and self._chaos is not None:
+            # injected cold-start inflation (slow AZ, image-pull storm)
+            overhead += self._chaos.extra_cold_start(self.provider)
         self.stats.on_start(task.task_id, task.worker)
         future._set_running()
+        # injected container death: the attempt bills its overhead plus
+        # kill_fraction of the body, then requeues at pump time.  The
+        # body already ran at submit — only the *schedule* takes the
+        # fault, which is exactly why N% mortality cannot change results
+        killed = (self._chaos is not None and exc is None
+                  and self._chaos.kills_attempt(
+                      batch=getattr(task.fn, "_repro_is_batch", False)))
+        billed = (self._chaos.plan.kill_fraction * body_dur
+                  if killed else body_dur)
         # the container id rides the heap tuple so the pump releases it
         # without re-parsing the worker-name string per completion
         heapq.heappush(self._heap,
-                       (now + overhead + body_dur, next(self._seq), cid,
-                        entry))
+                       (start_t + overhead + billed, next(self._seq),
+                        cid, entry, killed))
 
     def _pump_one(self) -> bool:
         """Advance virtual time by one completion event.  Returns False
         when the heap is drained (nothing outstanding)."""
         if not self._heap:
             return False
-        end_vt, _, cid, (future, task, result, exc, _dur) = \
-            heapq.heappop(self._heap)
+        end_vt, _, cid, entry, killed = heapq.heappop(self._heap)
+        future, task, result, exc, _dur = entry
         self.clock.advance_to(end_vt)
+        if killed:
+            # the container died mid-body: it is NOT released back to
+            # the fleet (the next acquire provisions cold) and the task
+            # retries on the chaos budget — mortality can only ever
+            # cost time/money, never results
+            self.stats.on_worker_killed(task.task_id, task.worker)
+            if task.attempts < self._chaos.retry_budget:
+                self.stats.on_retry()
+                self.stats.on_requeue(task.task_id, task.worker)
+                task.attempts += 1
+                self._waiting.appendleft(entry)  # retry at queue head
+            else:
+                task.end_time = end_vt
+                record = TaskRecord(
+                    task_id=task.task_id, worker=task.worker,
+                    submit_time=task.submit_time,
+                    start_time=task.start_time, end_time=end_vt,
+                    cost_hint=task.cost_hint, remote=self.remote,
+                    attempts=task.attempts)
+                self.stats.on_finish(record, ok=False)
+                future._set_exception(WorkerKilledError(
+                    f"container died {task.attempts} times running "
+                    f"task {task.task_id}"))
+            while self._waiting and self.stats.active < self._allowed():
+                self._start(self._waiting.popleft())
+            return True
         task.end_time = end_vt
         if self._fleet is not None:
             self._fleet.release(cid, end_vt)

@@ -23,6 +23,10 @@ Now there is a single source of truth:
       complete        terminal settlement (carries the TaskRecord)
       capacity_grow   pool was resized up (carries the new capacity)
       capacity_shrink pool was resized down
+      worker_killed   an injected fault killed the attempt's container
+      throttled       admission backed off (rate limit / storm)
+      cancel          a pending task was cancelled (fail-fast siblings)
+      folded          master journaled a folded result (WAL entry)
 
   Derived views — :attr:`EventLog.records`,
   :meth:`EventLog.concurrency_series`, :meth:`EventLog.capacity_series`,
@@ -56,6 +60,7 @@ __all__ = [
     "Event", "EventLog", "EVENT_KINDS", "PARENT_ROOT",
     "SUBMIT", "COLD_START", "START", "REQUEUE", "COMPLETE",
     "CAPACITY_GROW", "CAPACITY_SHRINK",
+    "WORKER_KILLED", "THROTTLED", "CANCEL", "FOLDED",
 ]
 
 SUBMIT = "submit"
@@ -65,9 +70,14 @@ REQUEUE = "requeue"
 COMPLETE = "complete"
 CAPACITY_GROW = "capacity_grow"
 CAPACITY_SHRINK = "capacity_shrink"
+WORKER_KILLED = "worker_killed"
+THROTTLED = "throttled"
+CANCEL = "cancel"
+FOLDED = "folded"
 
 EVENT_KINDS = (SUBMIT, COLD_START, START, REQUEUE, COMPLETE,
-               CAPACITY_GROW, CAPACITY_SHRINK)
+               CAPACITY_GROW, CAPACITY_SHRINK,
+               WORKER_KILLED, THROTTLED, CANCEL, FOLDED)
 
 #: ``Event.parent`` sentinel for an explicit root submit (no spawning
 #: completion).  ``parent=None`` means the recording predates parent
@@ -137,7 +147,9 @@ class Event:
     ``task_id``/``worker`` on task-lifecycle kinds.  ``parent`` (on
     ``submit``) records the task id of the completion that spawned this
     dispatch — :data:`PARENT_ROOT` for seeds/arrivals with no spawning
-    completion, ``None`` when the emitter did not track parentage."""
+    completion, ``None`` when the emitter did not track parentage.
+    ``payload`` is an opaque JSON-serializable blob for write-ahead-log
+    kinds (``folded`` entries carry the encoded item + result)."""
 
     t: float
     kind: str
@@ -147,6 +159,7 @@ class Event:
     ok: Optional[bool] = None
     record: Optional[TaskRecord] = None
     parent: Optional[int] = None
+    payload: Optional[object] = None
 
 
 class EventLog:
@@ -169,7 +182,8 @@ class EventLog:
              task_id: Optional[int] = None, worker: Optional[str] = None,
              capacity: Optional[int] = None, ok: Optional[bool] = None,
              record: Optional[TaskRecord] = None,
-             parent: Optional[int] = None) -> Event:
+             parent: Optional[int] = None,
+             payload: Optional[object] = None) -> Event:
         if kind not in EVENT_KINDS:
             raise ValueError(f"unknown event kind {kind!r}")
         with self._lock:
@@ -179,7 +193,8 @@ class EventLog:
             # fast path
             ev = Event(t=self.clock.now() if t is None else t, kind=kind,
                        task_id=task_id, worker=worker, capacity=capacity,
-                       ok=ok, record=record, parent=parent)
+                       ok=ok, record=record, parent=parent,
+                       payload=payload)
             self._events.append(ev)
             if self._analytics is not None:
                 self._analytics.observe(ev)

@@ -41,8 +41,8 @@ from typing import Any, Dict, Iterable, List, Optional, Union
 from ..core.irregular import IrregularResult, WorkSpec, run_irregular
 from ..core.provider import AutoscalePolicy, ProviderModel
 from ..core.simpool import SimPool
-from ..core.telemetry import (COLD_START, COMPLETE, PARENT_ROOT, SUBMIT,
-                              Event, EventLog)
+from ..core.telemetry import (CANCEL, COLD_START, COMPLETE, PARENT_ROOT,
+                              SUBMIT, Event, EventLog)
 from .store import iter_trace_events
 
 __all__ = ["ReplayTask", "ReplayWorkload", "extract_workload",
@@ -77,6 +77,13 @@ class ReplayWorkload:
     #: True when the submit events carried explicit parent ids (exact
     #: DAG recovery, no heuristic)
     has_parents: bool = False
+    #: tasks the recording explicitly cancelled (fail-fast ``Pool.map``
+    #: / ``submit_gather`` remainders) — deliberately not replayed, and
+    #: distinct from ``n_lost``
+    n_cancelled: int = 0
+    #: tasks submitted but neither completed nor cancelled (in flight
+    #: at capture / crash): the genuinely truncated tail
+    n_lost: int = 0
 
     @property
     def open_loop(self) -> bool:
@@ -104,14 +111,17 @@ def extract_workload(trace: Union[EventLog, Iterable[Event]], *,
     duration so replay re-applies the replay provider's overheads to
     pure body time.  For provider-less recordings (a flat
     ``invoke_overhead`` pool), pass that flat value as ``overhead_s``
-    instead.  Tasks that never completed (cancelled, in flight at
-    capture) are dropped with their subtrees' structure re-rooted onto
-    the nearest completed ancestor being unnecessary — they simply have
-    no completion to anchor children to, so nothing is lost.
+    instead.  Tasks that never completed are dropped from the replay
+    tree (no completion to anchor children to) but NOT conflated: ones
+    the recording *cancelled* (typed ``cancel`` events from fail-fast
+    ``Pool.map`` / ``submit_gather``) are counted as ``n_cancelled`` —
+    an intentional outcome a faithful replay also skips — while the
+    remainder (in flight at capture or crash) are ``n_lost``.
     """
     nodes: Dict[int, ReplayTask] = {}
     children_of: Dict[Optional[int], List[int]] = {None: []}
     cold_ids = set()
+    cancelled_ids = set()
     submit_at: Dict[int, float] = {}
     has_parents = False
     last_completed: Optional[int] = None
@@ -133,6 +143,8 @@ def extract_workload(trace: Union[EventLog, Iterable[Event]], *,
             submit_at[ev.task_id] = ev.t
         elif ev.kind == COLD_START and ev.task_id is not None:
             cold_ids.add(ev.task_id)
+        elif ev.kind == CANCEL and ev.task_id is not None:
+            cancelled_ids.add(ev.task_id)
         elif ev.kind == COMPLETE and ev.record is not None:
             r = ev.record
             cold = r.task_id in cold_ids
@@ -166,6 +178,8 @@ def extract_workload(trace: Union[EventLog, Iterable[Event]], *,
         else 0.0,
         recorded_cold_starts=len(cold_ids),
         has_parents=has_parents,
+        n_cancelled=len(cancelled_ids),
+        n_lost=max(0, len(submit_at) - len(nodes) - len(cancelled_ids)),
     )
 
 

@@ -38,9 +38,9 @@ from collections import deque
 from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 from ..core.futures import TaskRecord
-from ..core.telemetry import (CAPACITY_GROW, CAPACITY_SHRINK, COMPLETE,
-                              EVENT_KINDS, SUBMIT, Clock, Event,
-                              EventLog)
+from ..core.telemetry import (CANCEL, CAPACITY_GROW, CAPACITY_SHRINK,
+                              COMPLETE, EVENT_KINDS, SUBMIT, Clock,
+                              Event, EventLog)
 from .analytics import TraceAnalytics
 
 __all__ = ["TraceStore", "ShardedTraceStore", "TraceReader",
@@ -60,7 +60,8 @@ def iter_trace_events(trace) -> Iterable[Event]:
         return trace.events()
     return trace
 
-_EVENT_FIELDS = ("task_id", "worker", "capacity", "ok", "parent")
+_EVENT_FIELDS = ("task_id", "worker", "capacity", "ok", "parent",
+                 "payload")
 _RECORD_FIELDS = ("task_id", "worker", "submit_time", "start_time",
                   "end_time", "cost_hint", "remote", "attempts")
 
@@ -83,7 +84,7 @@ def event_from_dict(d: dict) -> Event:
         task_id=d.get("task_id"), worker=d.get("worker"),
         capacity=d.get("capacity"), ok=d.get("ok"),
         record=TaskRecord(**rec) if rec is not None else None,
-        parent=d.get("parent"))
+        parent=d.get("parent"), payload=d.get("payload"))
 
 
 class TraceStore(EventLog):
@@ -130,7 +131,8 @@ class TraceStore(EventLog):
              task_id: Optional[int] = None, worker: Optional[str] = None,
              capacity: Optional[int] = None, ok: Optional[bool] = None,
              record: Optional[TaskRecord] = None,
-             parent: Optional[int] = None) -> Event:
+             parent: Optional[int] = None,
+             payload: Optional[object] = None) -> Event:
         if kind not in EVENT_KINDS:
             raise ValueError(f"unknown event kind {kind!r}")
         with self._lock:
@@ -141,7 +143,8 @@ class TraceStore(EventLog):
             # incremental analytics on its monotone fast path
             ev = Event(t=self.clock.now() if t is None else t, kind=kind,
                        task_id=task_id, worker=worker, capacity=capacity,
-                       ok=ok, record=record, parent=parent)
+                       ok=ok, record=record, parent=parent,
+                       payload=payload)
             line = json.dumps(event_to_dict(ev),
                               separators=(",", ":")) + "\n"
             if self._written % self.index_every == 0:
@@ -452,7 +455,8 @@ class ShardedTraceStore(EventLog):
              task_id: Optional[int] = None, worker: Optional[str] = None,
              capacity: Optional[int] = None, ok: Optional[bool] = None,
              record: Optional[TaskRecord] = None,
-             parent: Optional[int] = None) -> Event:
+             parent: Optional[int] = None,
+             payload: Optional[object] = None) -> Event:
         if kind not in EVENT_KINDS:
             raise ValueError(f"unknown event kind {kind!r}")
         with self._lock:
@@ -462,7 +466,7 @@ class ShardedTraceStore(EventLog):
                 seg = self._bound
             elif kind == SUBMIT:
                 self._owner[task_id] = seg = self._bound
-            elif kind == COMPLETE:
+            elif kind in (COMPLETE, CANCEL):
                 # terminal: drop the owner entry so the map stays
                 # bounded by in-flight tasks, not trace length
                 seg = self._owner.pop(task_id, self._bound)
@@ -470,7 +474,8 @@ class ShardedTraceStore(EventLog):
                 seg = self._owner.get(task_id, self._bound)
             ev = self.segments[seg].emit(
                 kind, t=t, task_id=task_id, worker=worker,
-                capacity=capacity, ok=ok, record=record, parent=parent)
+                capacity=capacity, ok=ok, record=record, parent=parent,
+                payload=payload)
             self._written += 1
             self._analytics.observe(ev)
         return ev

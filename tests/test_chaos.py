@@ -1,0 +1,497 @@
+"""repro.chaos: fault injection, WAL crash recovery, routing policies."""
+import numpy as np
+import pytest
+
+from repro.algorithms.betweenness import RMATParams, bc_spec
+from repro.algorithms.mariani_silver import MSParams, ms_spec
+from repro.algorithms.uts import UTSParams, uts_spec
+from repro.chaos import (CostPerDeadlinePolicy, FaultPlan,
+                         LeastLoadedPolicy, LocalFirstPolicy,
+                         MasterKilledError, RandomPolicy, ThresholdPolicy,
+                         kill_master_after, make_routing_policy,
+                         recover_frontier)
+from repro.core import (TaskShape, WorkerKilledError, WorkSpec, make_pool,
+                        run_irregular)
+from repro.core.provider import Backoff
+from repro.core.telemetry import (CANCEL, FOLDED, REQUEUE, THROTTLED,
+                                  WORKER_KILLED, Event)
+from repro.trace import (TraceStore, event_from_dict, event_to_dict)
+from repro.trace.replay import extract_workload
+
+UTS_P = UTSParams(seed=2, b0=3.0, max_depth=6)
+UTS_SHAPE = TaskShape(split_factor=4, iters=50)
+MS_P = MSParams(width=64, height=64, max_dwell=32, max_depth=3,
+                initial_subdivision=4)
+BC_P = RMATParams(scale=6, edge_factor=8, seed=2)
+
+
+def _run(spec, *, faults=None, trace=None, **kw):
+    pool = make_pool("sim", max_concurrency=16, faults=faults, trace=trace)
+    try:
+        return run_irregular(pool, spec, **kw), pool
+    finally:
+        pool.shutdown()
+
+
+@pytest.fixture(scope="module")
+def uts_base():
+    r, _ = _run(uts_spec(UTS_P), shape=UTS_SHAPE)
+    return r
+
+
+@pytest.fixture(scope="module")
+def ms_base():
+    r, _ = _run(ms_spec(MS_P))
+    return r
+
+
+@pytest.fixture(scope="module")
+def bc_base():
+    r, _ = _run(bc_spec(BC_P, n_tasks=16))
+    return r
+
+
+# -- FaultPlan determinism -------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(kill_task_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(container_mortality=-0.1)
+    with pytest.raises(ValueError):
+        FaultPlan(storms=((2.0, 1.0),))
+    with pytest.raises(ValueError):
+        FaultPlan(max_kill_attempts=0)
+    FaultPlan(kill_task_rate=1.0)  # rate 1.0 is the terminal regime
+
+
+def test_bound_decisions_are_seeded_and_counterbased():
+    plan = FaultPlan(seed=11, kill_task_rate=0.3)
+    ba, bb = plan.bind(), plan.bind()
+    a = [ba.kills_attempt() for _ in range(50)]
+    b = [bb.kills_attempt() for _ in range(50)]
+    assert a == b                      # same seed -> same schedule
+    assert any(a) and not all(a)
+    c = [FaultPlan(seed=12, kill_task_rate=0.3).bind().kills_attempt()
+         for _ in range(1)]            # different seed -> (likely) diff
+    bound = plan.bind()
+    assert bound.retry_budget == plan.max_kill_attempts
+    for _ in range(10):
+        bound.kills_attempt()
+    assert bound.decisions == 10
+    assert 0 <= bound.kills <= 10
+    assert isinstance(c[0], bool)
+
+
+def test_storm_windows():
+    bound = FaultPlan(seed=3, storms=((1.0, 2.0), (5.0, 6.0))).bind()
+    assert bound.storm_until(0.5) is None
+    assert bound.storm_until(1.5) == 2.0
+    assert bound.storm_until(5.0) == 6.0
+    assert bound.storm_delay(0.5) == 0.0
+    d = bound.storm_delay(1.5)
+    assert 0.5 <= d < 0.502            # window remainder + <=1ms jitter
+
+
+# -- mortality invariant: results never change ----------------------------
+
+def test_uts_mortality_bit_identical(uts_base):
+    plan = FaultPlan(seed=7, kill_task_rate=0.3, container_mortality=0.3)
+    r, pool = _run(uts_spec(UTS_P), faults=plan, shape=UTS_SHAPE)
+    assert r.output == uts_base.output
+    assert r.worker_deaths > 0
+    assert r.retries >= r.worker_deaths
+    assert r.makespan_s > uts_base.makespan_s  # the mortality tax
+
+
+def test_ms_mortality_bit_identical(ms_base):
+    plan = FaultPlan(seed=5, container_mortality=0.3)
+    r, _ = _run(ms_spec(MS_P), faults=plan)
+    assert np.array_equal(r.output["image"], ms_base.output["image"])
+    assert r.output["filled"] == ms_base.output["filled"]
+
+
+def test_bc_mortality_bit_identical(bc_base):
+    plan = FaultPlan(seed=5, container_mortality=0.3)
+    r, _ = _run(bc_spec(BC_P, n_tasks=16), faults=plan)
+    assert np.array_equal(r.output, bc_base.output)
+
+
+def test_batch_carrier_kills(uts_base):
+    """kill_batch_rate targets fused carriers; the whole wave requeues
+    and the run still lands bit-identically."""
+    plan = FaultPlan(seed=3, kill_batch_rate=0.4)
+    r, pool = _run(uts_spec(UTS_P), faults=plan, shape=UTS_SHAPE,
+                   batching=True)
+    assert r.output == uts_base.output
+    assert r.worker_deaths > 0
+
+
+def test_mortality_events_on_timeline():
+    plan = FaultPlan(seed=7, container_mortality=0.4)
+    r, pool = _run(uts_spec(UTS_P), faults=plan, shape=UTS_SHAPE)
+    counts = pool.events.counts()
+    assert counts.get(WORKER_KILLED, 0) > 0
+    # every injected kill also lands the slot-freeing requeue
+    assert counts.get(REQUEUE, 0) >= counts[WORKER_KILLED]
+    assert pool.snapshot()["worker_deaths"] == counts[WORKER_KILLED]
+
+
+def test_thread_executor_kills_and_terminal_error(uts_base):
+    plan = FaultPlan(seed=5, kill_task_rate=0.3)
+    with make_pool("local", max_concurrency=4, invoke_overhead=0.0,
+                   faults=plan) as pool:
+        r = run_irregular(pool, uts_spec(UTS_P), shape=UTS_SHAPE)
+        assert pool.stats.snapshot()["worker_deaths"] >= 0
+    assert r.output == uts_base.output
+
+    # rate 1.0 exhausts the kill retry budget -> typed terminal error
+    doomed = FaultPlan(seed=1, kill_task_rate=1.0, max_kill_attempts=3)
+    with make_pool("local", max_concurrency=2, invoke_overhead=0.0,
+                   faults=doomed) as pool:
+        f = pool.submit(lambda: 42)
+        with pytest.raises(WorkerKilledError):
+            f.result(timeout=30)
+        assert f._task.attempts == 3
+        snap = pool.stats.snapshot()
+        assert snap["worker_deaths"] == 3
+        assert snap["failed"] == 1
+
+
+def test_cold_start_inflation():
+    from repro.core import ProviderModel
+    vts = {}
+    for mult in (1.0, 5.0):
+        plan = FaultPlan(seed=0, cold_start_multiplier=mult)
+        pool = make_pool("sim", max_concurrency=4,
+                         provider=ProviderModel.aws_lambda(),
+                         faults=plan)
+        run_irregular(pool, uts_spec(UTS_P), shape=UTS_SHAPE)
+        vts[mult] = pool.virtual_time_s
+        pool.shutdown()
+    assert vts[5.0] > vts[1.0]
+
+
+# -- storms, backoff, throttled events ------------------------------------
+
+def test_backoff_is_seeded_capped_and_resets():
+    a, b = Backoff(seed=4), Backoff(seed=4)
+    seq_a = [a.next() for _ in range(12)]
+    seq_b = [b.next() for _ in range(12)]
+    assert seq_a == seq_b              # seeded -> reproducible
+    assert all(d <= 0.05 for d in seq_a)
+    assert seq_a[6] > seq_a[0]         # grows until the cap
+    a.reset()
+    assert a.attempt == 0
+    assert a.next() <= 2 * 1e-4        # back to the base tier
+
+
+def test_sim_storm_throttles_but_preserves_output(uts_base):
+    plan = FaultPlan(seed=9, storms=((0.0, 0.05),))
+    r, pool = _run(uts_spec(UTS_P), faults=plan, shape=UTS_SHAPE)
+    assert r.output == uts_base.output
+    assert pool.events.counts().get(THROTTLED, 0) >= 1
+    assert pool.snapshot()["throttled"] >= 1
+
+
+# -- cancellation events ---------------------------------------------------
+
+def _boom(x):
+    if x == 3:
+        raise RuntimeError("nope")
+    import time
+    time.sleep(0.02)
+    return x
+
+
+def test_map_fail_fast_emits_cancel_events():
+    with make_pool("local", max_concurrency=2, invoke_overhead=0.0,
+                   max_attempts=1) as pool:
+        with pytest.raises(RuntimeError):
+            pool.map(_boom, range(12))
+        counts = pool.events.counts()
+        assert counts.get(CANCEL, 0) > 0
+        assert pool.stats.snapshot()["cancelled"] == counts[CANCEL]
+        # cancel events carry the failing parent's task id
+        cancels = [e for e in pool.events.events() if e.kind == CANCEL]
+        assert all(e.parent is not None for e in cancels)
+
+
+def test_gather_fail_fast_cancels_remainder():
+    with make_pool("local", max_concurrency=2, invoke_overhead=0.0,
+                   max_attempts=1) as pool:
+        # force the decomposing path: fused carriers have no siblings
+        # to cancel, the countdown aggregation does
+        pool.supports_batching = False
+        f = pool.submit_gather(lambda xs: [_boom(x) for x in xs],
+                               list(range(12)), item_fn=_boom)
+        with pytest.raises(RuntimeError):
+            f.result(timeout=30)
+        assert pool.events.counts().get(CANCEL, 0) > 0
+
+
+def test_cancel_round_trips_through_trace_and_replay():
+    store = TraceStore(ring_size=32)
+    with make_pool("local", max_concurrency=2, invoke_overhead=0.0,
+                   max_attempts=1, trace=store) as pool:
+        with pytest.raises(RuntimeError):
+            pool.map(_boom, range(12))
+        wl = extract_workload(store)
+    # cancelled tasks are counted distinctly, not as in-flight losses
+    assert wl.n_cancelled > 0
+    assert wl.n_lost == 0
+    store.close()
+
+
+def test_new_event_kinds_serialize():
+    for kind in (WORKER_KILLED, THROTTLED, CANCEL, FOLDED):
+        ev = Event(kind=kind, t=1.5, task_id=7,
+                   payload={"item": [1, 2], "result": {"c": 3}})
+        rt = event_from_dict(event_to_dict(ev))
+        assert rt.kind == kind and rt.payload == ev.payload
+
+
+# -- WAL crash recovery ----------------------------------------------------
+
+def _kill_resume(mk_spec, n_folds, **kw):
+    pool = make_pool("sim", max_concurrency=16)
+    with pytest.raises(MasterKilledError):
+        run_irregular(pool, kill_master_after(mk_spec(), n_folds),
+                      wal=True, **kw)
+    trace = pool.events
+    pool2 = make_pool("sim", max_concurrency=16)
+    try:
+        r = run_irregular(pool2, mk_spec(), resume_from=trace, **kw)
+    finally:
+        pool2.shutdown()
+        pool.shutdown()
+    return r
+
+
+@pytest.mark.parametrize("n_folds", [1, 5, 12])
+def test_uts_kill_resume_bit_identical(uts_base, n_folds):
+    r = _kill_resume(lambda: uts_spec(UTS_P), n_folds, shape=UTS_SHAPE)
+    assert r.output == uts_base.output
+    assert r.recovered_tasks > 0
+
+
+def test_uts_kill_resume_sharded(uts_base):
+    r = _kill_resume(lambda: uts_spec(UTS_P), 7, shape=UTS_SHAPE,
+                     shards=3)
+    assert r.output == uts_base.output
+    assert r.shards == 3
+
+
+def test_uts_kill_resume_batched(uts_base):
+    """Fused chunks journal atomically: a mid-batch master kill must
+    not double-count the carrier's banked work on resume."""
+    r = _kill_resume(lambda: uts_spec(UTS_P), 6, shape=UTS_SHAPE,
+                     batching=True)
+    assert r.output == uts_base.output
+
+
+def test_ms_kill_resume_bit_identical(ms_base):
+    r = _kill_resume(lambda: ms_spec(MS_P), 4)
+    assert np.array_equal(r.output["image"], ms_base.output["image"])
+    assert r.output["filled"] == ms_base.output["filled"]
+    assert r.output["evaluated"] == ms_base.output["evaluated"]
+
+
+def test_bc_kill_resume_bit_identical(bc_base):
+    r = _kill_resume(lambda: bc_spec(BC_P, n_tasks=16), 6)
+    assert np.array_equal(r.output, bc_base.output)
+
+
+def test_bc_kill_resume_sharded(bc_base):
+    r = _kill_resume(lambda: bc_spec(BC_P, n_tasks=16), 6, shards=3)
+    assert np.array_equal(r.output, bc_base.output)
+
+
+def test_resume_from_spilled_trace_file(tmp_path, uts_base):
+    """The spilled JSONL alone — what a real crash leaves behind — is a
+    sufficient WAL."""
+    path = str(tmp_path / "run.jsonl")
+    store = TraceStore(path=path, ring_size=32)
+    pool = make_pool("sim", max_concurrency=16, trace=store)
+    with pytest.raises(MasterKilledError):
+        run_irregular(pool, kill_master_after(uts_spec(UTS_P), 5),
+                      wal=True, shape=UTS_SHAPE)
+    store.flush()
+    with make_pool("sim", max_concurrency=16) as pool2:
+        r = run_irregular(pool2, uts_spec(UTS_P), shape=UTS_SHAPE,
+                          resume_from=path)
+    assert r.output == uts_base.output
+    store.close()
+
+
+def test_recover_frontier_unit():
+    pool = make_pool("sim", max_concurrency=16)
+    with pytest.raises(MasterKilledError):
+        run_irregular(pool, kill_master_after(uts_spec(UTS_P), 5),
+                      wal=True, shape=UTS_SHAPE)
+    rec = recover_frontier(pool.events, uts_spec(UTS_P),
+                           shape=UTS_SHAPE)
+    pending, partial = rec              # tuple unpacking
+    assert rec.folded == 5
+    assert len(pending) > 0
+    assert partial >= 0
+    pool.shutdown()
+
+
+def test_wal_requires_codecs():
+    bare = WorkSpec(name="bare", execute=lambda item, shape: item,
+                    seed=lambda shape: [1, 2],
+                    reduce=lambda s, r: s + r, init=lambda: 0)
+    with make_pool("sim", max_concurrency=4) as pool:
+        with pytest.raises(ValueError, match="codec"):
+            run_irregular(pool, bare, wal=True)
+
+
+def test_resume_incompatible_with_controller_and_arrivals():
+    from repro.core import StagedController
+    spec = uts_spec(UTS_P)
+    ctrl = StagedController(initial=UTS_SHAPE, stages=[])
+    with make_pool("sim", max_concurrency=4) as pool:
+        with pytest.raises(ValueError, match="controller"):
+            run_irregular(pool, spec, resume_from=pool.events,
+                          controller=ctrl)
+        with pytest.raises(ValueError, match="arrivals"):
+            run_irregular(pool, spec, resume_from=pool.events,
+                          arrivals=[(0.0, None)])
+
+
+def test_wal_shape_mismatch_detected():
+    pool = make_pool("sim", max_concurrency=16)
+    with pytest.raises(MasterKilledError):
+        run_irregular(pool, kill_master_after(uts_spec(UTS_P), 5),
+                      wal=True, shape=UTS_SHAPE)
+    with pytest.raises(ValueError, match="shape"):
+        recover_frontier(pool.events, uts_spec(UTS_P),
+                         shape=TaskShape(split_factor=13, iters=999))
+    pool.shutdown()
+
+
+def test_result_accounting_fields(uts_base):
+    assert uts_base.retries == 0
+    assert uts_base.worker_deaths == 0
+    assert uts_base.recovered_tasks == 0
+    plan = FaultPlan(seed=7, container_mortality=0.3)
+    r, _ = _run(uts_spec(UTS_P), faults=plan, shape=UTS_SHAPE)
+    assert r.worker_deaths > 0 and r.retries >= r.worker_deaths
+
+
+# -- routing policies ------------------------------------------------------
+
+class _StubPool:
+    def __init__(self, cap, idle, pending=0):
+        self.max_concurrency = cap
+        self._idle = idle
+        self._pending = pending
+        self.provider = None
+        self.invoke_overhead = 0.1
+
+    def idle_capacity(self):
+        return self._idle
+
+    def pending(self):
+        return self._pending
+
+
+class _StubHybrid:
+    def __init__(self, local, elastic):
+        self.local = local
+        self.elastic = elastic
+
+
+def test_local_first_policy():
+    pol = LocalFirstPolicy()
+    assert pol.route(_StubHybrid(_StubPool(4, 2), _StubPool(8, 8)))
+    assert not pol.route(_StubHybrid(_StubPool(4, 0), _StubPool(8, 8)))
+    # instances stay plain callables (legacy predicate contract)
+    assert pol(_StubHybrid(_StubPool(4, 2), _StubPool(8, 8))) is True
+
+
+def test_threshold_policy():
+    pol = ThresholdPolicy(cost_threshold=2.0)
+    h = _StubHybrid(_StubPool(4, 2), _StubPool(8, 8))
+    assert pol.route(h, cost_hint=1.0)        # small -> local
+    assert not pol.route(h, cost_hint=2.0)    # big -> elastic
+    h_full = _StubHybrid(_StubPool(4, 0), _StubPool(8, 8))
+    assert not pol.route(h_full, cost_hint=1.0)  # saturated -> spill
+
+
+def test_random_policy_deterministic():
+    a = [RandomPolicy(seed=6, p_local=0.5).route(None) for _ in range(1)]
+    pol1, pol2 = RandomPolicy(seed=6), RandomPolicy(seed=6)
+    seq1 = [pol1.route(None) for _ in range(40)]
+    seq2 = [pol2.route(None) for _ in range(40)]
+    assert seq1 == seq2
+    assert any(seq1) and not all(seq1)
+    assert isinstance(a[0], bool)
+
+
+def test_least_loaded_policy():
+    pol = LeastLoadedPolicy()
+    # local 2/4 busy vs elastic 8/8 busy -> local
+    assert pol.route(_StubHybrid(_StubPool(4, 2), _StubPool(8, 0)))
+    # local full + backlog vs idle elastic -> elastic
+    assert not pol.route(
+        _StubHybrid(_StubPool(4, 0, pending=6), _StubPool(8, 8)))
+
+
+def test_cost_per_deadline_policy():
+    pol = CostPerDeadlinePolicy(deadline_s=1.0, alpha_s_per_cost=1.0)
+    idle = _StubHybrid(_StubPool(4, 4), _StubPool(8, 8))
+    # idle local meets the deadline at zero marginal cost
+    assert pol.route(idle, cost_hint=0.5)
+    # deep local backlog blows the deadline; the paid path meets it
+    backed_up = _StubHybrid(_StubPool(4, 0, pending=20), _StubPool(8, 8))
+    assert not pol.route(backed_up, cost_hint=0.5)
+    # neither side meets it -> degrade to the faster side (backed-up
+    # local eta 10.0 vs elastic 0.1 + 2.5)
+    doomed = _StubHybrid(_StubPool(4, 0, pending=8), _StubPool(8, 8))
+    assert not pol.route(doomed, cost_hint=2.5)
+    # ... and an idle donor VM is the faster side for the same task
+    assert pol.route(_StubHybrid(_StubPool(4, 4), _StubPool(8, 8)),
+                     cost_hint=2.5)
+    with pytest.raises(ValueError):
+        CostPerDeadlinePolicy(deadline_s=0.0)
+
+
+def test_make_routing_policy():
+    assert isinstance(make_routing_policy("least_loaded"),
+                      LeastLoadedPolicy)
+    assert isinstance(make_routing_policy("cost-per-deadline",
+                                          deadline_s=0.5),
+                      CostPerDeadlinePolicy)
+    with pytest.raises(ValueError, match="unknown routing policy"):
+        make_routing_policy("nope")
+
+
+def test_hybrid_accepts_routing_policy(uts_base):
+    pol = make_routing_policy("least-loaded")
+    with make_pool("hybrid", local_concurrency=2, elastic_concurrency=8,
+                   policy=pol) as pool:
+        r = run_irregular(pool, uts_spec(UTS_P), shape=UTS_SHAPE)
+        placed = pool.placement_counts()
+    assert r.output == uts_base.output
+    assert placed["local"] + placed["elastic"] == r.tasks
+
+
+def test_hybrid_legacy_callable_policy_still_works(uts_base):
+    with make_pool("hybrid", local_concurrency=2, elastic_concurrency=8,
+                   policy=lambda h: False) as pool:
+        r = run_irregular(pool, uts_spec(UTS_P), shape=UTS_SHAPE)
+        placed = pool.placement_counts()
+    assert r.output == uts_base.output
+    assert placed["local"] == 0 and placed["elastic"] == r.tasks
+
+
+def test_hybrid_forwards_faults_to_subpools(uts_base):
+    plan = FaultPlan(seed=2, kill_task_rate=0.2)
+    with make_pool("hybrid", local_concurrency=2, elastic_concurrency=8,
+                   faults=plan) as pool:
+        r = run_irregular(pool, uts_spec(UTS_P), shape=UTS_SHAPE)
+        deaths = pool.stats.worker_deaths
+    assert r.output == uts_base.output
+    assert deaths > 0

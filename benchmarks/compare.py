@@ -54,6 +54,10 @@ DRIFT_KEYS = (
     ("chaos_mortality", "makespan_tax_30_pct"),
     ("chaos_mortality", "cost_tax_30_pct"),
     ("chaos_mortality", "recovery_overhead_pct"),
+    ("dag_pipeline", "montage_vt_s"),
+    ("dag_pipeline", "iter_mr_vt_s"),
+    ("faas_parallelism", "gcf_achieved_at_512"),
+    ("faas_parallelism", "fit_ramp_per_min"),
 )
 #: wall-clock keys (real time, not virtual) gated at WALL_TOL — catches
 #: order-of-magnitude master-loop regressions without flaking on noise
@@ -78,6 +82,9 @@ INVARIANTS = (
     ("chaos_mortality", "chaos_identical_outputs"),
     ("chaos_mortality", "resume_identical_outputs"),
     ("chaos_mortality", "routing_beats_threshold"),
+    ("dag_pipeline", "dag_identical_outputs"),
+    ("faas_parallelism", "probe_envelope_monotone"),
+    ("faas_parallelism", "probe_fit_recovers"),
 )
 
 

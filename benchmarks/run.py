@@ -1040,6 +1040,84 @@ def roofline_from_dryrun() -> None:
     emit("roofline_from_dryrun", 0.0, cells=n)
 
 
+# -- DAG workloads: dependency-structured pipelines (repro.dag) -------------------
+
+def dag_pipeline() -> None:
+    """The three shipped DAG families on the sim pool: plain vs fused
+    dispatch (and a wall-clock thread pool) must fold to identical sink
+    values; reports the graph-shape metrics the DAG driver surfaces."""
+    from repro.dag import (hyperparam_sweep_dag, iterative_mapreduce_dag,
+                           montage_dag)
+    t0 = time.monotonic()
+    derived = {}
+    identical = True
+    families = (
+        ("montage", montage_dag, {"tiles": 32}),
+        ("sweep", hyperparam_sweep_dag, {"configs": 16, "stages": 4}),
+        ("iter_mr", iterative_mapreduce_dag,
+         {"rounds": 5, "initial_width": 12}),
+    )
+    for key, mk, kw in families:
+        plain = run_irregular(make_pool("sim", max_concurrency=32),
+                              mk(**kw))
+        fused = run_irregular(make_pool("sim", max_concurrency=32),
+                              mk(**kw), batching=True)
+        lpool = make_pool("local", max_concurrency=4)
+        try:
+            wall = run_irregular(lpool, mk(**kw))
+        finally:
+            lpool.shutdown()
+        identical = identical and (
+            plain.output == fused.output == wall.output)
+        derived[f"{key}_nodes"] = plain.dag_nodes
+        derived[f"{key}_critical_path"] = plain.critical_path_len
+        derived[f"{key}_max_stage_width"] = max(plain.stage_widths)
+        derived[f"{key}_vt_s"] = round(plain.makespan_s, 4)
+        derived[f"{key}_vt_fused_s"] = round(fused.makespan_s, 4)
+    derived["dag_identical_outputs"] = bool(identical)
+    emit("dag_pipeline", (time.monotonic() - t0) * 1e6, **derived)
+
+
+# -- Barcelona-Pons parallelism probe (repro.dag.probe) ---------------------------
+
+def faas_parallelism() -> None:
+    """Simultaneous-invocation bursts at geometric widths against the
+    provider presets (achieved-vs-requested concurrency, ramp latency,
+    cold share), plus the gated fit-recovery check: a constant-width
+    probe of a known preset must let ``fit_provider`` recover its
+    burst/ramp/cold-start within tolerance."""
+    import dataclasses as _dc
+    from repro.dag import run_parallelism_probe
+    t0 = time.monotonic()
+    derived = {}
+    monotone = True
+    for preset in ("aws_lambda", "gcf", "azure_functions", "prewarmed"):
+        provider = getattr(ProviderModel, preset)()
+        pool = make_pool("sim", max_concurrency=2048, provider=provider)
+        prof = run_parallelism_probe(pool, max_width=512)
+        monotone = monotone and prof.envelope_monotone()
+        last = prof.bursts[-1]
+        derived[f"{preset}_achieved_at_512"] = last.achieved
+        derived[f"{preset}_ramp_latency_s"] = round(last.ramp_latency_s, 3)
+        derived[f"{preset}_cold_share"] = round(last.cold_start_share, 3)
+    derived["probe_envelope_monotone"] = bool(monotone)
+    known = _dc.replace(ProviderModel.gcf(), name="probe-target",
+                        burst_concurrency=8, scaling_ramp_per_min=240.0,
+                        cold_start_s=0.3)
+    pool = make_pool("sim", max_concurrency=1024, provider=known)
+    prof = run_parallelism_probe(pool, max_width=256, start=256,
+                                 repeats_at_max=10)
+    fitted = prof.fit(base=known)
+    derived["fit_burst"] = fitted.burst_concurrency
+    derived["fit_ramp_per_min"] = round(fitted.scaling_ramp_per_min, 1)
+    derived["fit_cold_s"] = round(fitted.cold_start_s, 4)
+    derived["probe_fit_recovers"] = bool(
+        abs(fitted.burst_concurrency - 8) <= 2
+        and abs(fitted.scaling_ramp_per_min - 240.0) / 240.0 < 0.25
+        and abs(fitted.cold_start_s - 0.3) / 0.3 < 0.25)
+    emit("faas_parallelism", (time.monotonic() - t0) * 1e6, **derived)
+
+
 BENCHES = {
     "table1": table1_uts_tree_sizes,
     "table2": table2_characterization,
@@ -1057,6 +1135,8 @@ BENCHES = {
     "trace_replay": trace_record_replay,
     "serving_knee": serving_knee,
     "chaos_mortality": chaos_mortality,
+    "dag_pipeline": dag_pipeline,
+    "faas_parallelism": faas_parallelism,
     "roofline": roofline_from_dryrun,
 }
 

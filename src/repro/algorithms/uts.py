@@ -257,6 +257,12 @@ def uts_spec(params: UTSParams) -> WorkSpec:
         encode_item=_enc_bag,
         encode_result=lambda r: {"c": int(r[0]), **_enc_bag(r[1])},
         decode_result=lambda e: (e["c"], _dec_bag(e)),
+        # checkpoint codecs: the bag encoding happens to be invertible
+        # and the accumulator is an exact int, so UTS supports WAL
+        # segment checkpointing (run_irregular checkpoint_every=)
+        decode_item=_dec_bag,
+        encode_state=lambda s: int(s),
+        decode_state=lambda e: int(e),
         shape=TaskShape(split_factor=8, iters=50_000),
     )
 

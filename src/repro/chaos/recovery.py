@@ -25,6 +25,16 @@ run.  The spec only needs three codec hooks (``encode_item``,
 ``encode_result``, ``decode_result``): items are never decoded — their
 encoding is just the matching key — so only results must round-trip
 exactly.
+
+Segment checkpointing (``run_irregular(..., checkpoint_every=N)``)
+bounds the replay: the driver periodically journals a ``checkpoint``
+event carrying the encoded accumulator and the pending multiset at a
+consistent cut, and recovery then restarts from the LAST checkpoint
+and folds only the journal tail past it — a 10⁵-event journal recovers
+in O(tail), not O(journal).  Checkpoint restart needs two more codecs
+(``decode_state``, ``decode_item``) because pending items are
+reconstructed from their encodings rather than re-derived from
+seed/split.
 """
 from __future__ import annotations
 
@@ -35,7 +45,7 @@ from dataclasses import dataclass, field
 from typing import Any, List, Optional
 
 from ..core.adaptive import TaskShape
-from ..core.telemetry import FOLDED
+from ..core.telemetry import CHECKPOINT, FOLDED
 
 __all__ = ["FrontierRecovery", "recover_frontier", "MasterKilledError",
            "kill_master_after"]
@@ -58,12 +68,17 @@ class FrontierRecovery:
     Iterable as ``(pending, partial)`` for tuple unpacking."""
 
     #: un-folded work items, in discovery order (seeds first, then each
-    #: journaled result's children in journal order)
+    #: journaled result's children in journal order; when recovering
+    #: from a checkpoint, the checkpoint's decoded pending items first)
     pending: List[Any] = field(default_factory=list)
     #: accumulator state after replaying every journaled fold
     partial: Any = None
-    #: journaled folds replayed
+    #: journaled folds replayed — with a checkpoint, only the tail past
+    #: it (the whole point of segment checkpointing)
     folded: int = 0
+    #: True when recovery restarted from a ``checkpoint`` event instead
+    #: of folding the entire journal
+    checkpointed: bool = False
 
     def __iter__(self):
         return iter((self.pending, self.partial))
@@ -106,16 +121,37 @@ def recover_frontier(
 
     # a payload is one {"item", "result"} entry, or — for fused batch
     # chunks / sharded gather waves, journaled atomically — a
-    # {"batch": [entry, ...]} of them
+    # {"batch": [entry, ...]} of them.  A ``checkpoint`` event resets
+    # the collection: only the tail past the LAST checkpoint must be
+    # replayed (segment checkpointing — the checkpoint carries the
+    # encoded accumulator and the pending multiset at its cut).
     entries: List[dict] = []
+    ckpt: Optional[dict] = None
     for ev in iter_trace_events(trace):
-        if ev.kind != FOLDED or ev.payload is None:
+        if ev.payload is None:
             continue
-        entries.extend(ev.payload.get("batch", [ev.payload])
-                       if isinstance(ev.payload, dict) else ())
+        if ev.kind == CHECKPOINT:
+            ckpt = ev.payload
+            entries = []
+        elif ev.kind == FOLDED:
+            entries.extend(ev.payload.get("batch", [ev.payload])
+                           if isinstance(ev.payload, dict) else ())
 
-    # replay the journal: fold results in order, collect folded keys
-    partial = spec.init()
+    if ckpt is not None:
+        missing = [n for n in ("decode_state", "decode_item")
+                   if getattr(spec, n, None) is None]
+        if missing:
+            raise ValueError(
+                f"{spec.name}: the WAL carries a checkpoint but the "
+                f"spec lacks {', '.join(missing)} — cannot restart "
+                f"from it")
+        partial = spec.decode_state(ckpt["state"])
+        base = [spec.decode_item(e) for e in ckpt["pending"]]
+    else:
+        partial = spec.init()
+        base = None
+
+    # replay the journal tail: fold results in order, collect keys
     folded_keys: Counter = Counter()
     results = []
     for p in entries:
@@ -124,8 +160,10 @@ def recover_frontier(
         results.append(r)
         partial = spec.reduce(partial, r)
 
-    # every item the run ever knew about: seeds + journaled children
-    expected: List[Any] = list(spec.seed(seed_shape))
+    # every item the run knew about past the cut: the checkpoint's
+    # pending multiset (or, without one, the seeds) + tail children
+    expected: List[Any] = (base if base is not None
+                           else list(spec.seed(seed_shape)))
     for r in results:
         expected.extend(spec.split(r, shape))
 
@@ -144,10 +182,12 @@ def recover_frontier(
             f"replayed seed/split never produced — shape/initial_shape "
             f"probably differ from the killed run's")
     return FrontierRecovery(pending=pending, partial=partial,
-                            folded=len(entries))
+                            folded=len(entries),
+                            checkpointed=ckpt is not None)
 
 
-def kill_master_after(spec: Any, n_folds: int) -> Any:
+def kill_master_after(spec: Any, n_folds: int, *,
+                      kill_on_steal: Optional[int] = None) -> Any:
     """Test harness: a copy of ``spec`` whose master dies (raises
     :class:`MasterKilledError`) when it attempts fold ``n_folds + 1``.
 
@@ -157,6 +197,14 @@ def kill_master_after(spec: Any, n_folds: int) -> Any:
     would.  The counter is shared across shards (the sharded driver
     settles on one thread), so ``shards=K`` dies at the same global
     depth as ``shards=1``.
+
+    ``kill_on_steal=N`` additionally arms the *sharded* driver to die
+    on its N-th successful work-steal — mid-steal, after the transfer
+    but before the stolen items dispatch — exercising the crash window
+    fold-ordinal kills can never reach (steals move items between
+    in-memory frontiers without journaling, so the WAL left behind is
+    exactly a real mid-steal crash's).  Whichever trigger fires first
+    wins; pass a large ``n_folds`` to isolate the steal path.
     """
     inner = spec.reduce
     count = [0]
@@ -169,4 +217,9 @@ def kill_master_after(spec: Any, n_folds: int) -> Any:
         count[0] += 1
         return inner(state, result)
 
+    if kill_on_steal is not None:
+        # carried as a function attribute: specs are frozen dataclasses
+        # and the sharded driver already receives ``reduce`` — it reads
+        # the threshold back via getattr (see _run_sharded)
+        dying_reduce._repro_kill_on_steal = kill_on_steal
     return dataclasses.replace(spec, reduce=dying_reduce)

@@ -34,7 +34,8 @@ from .costmodel import CostReport, serverless_cost
 from .futures import CompletionQueue, ElasticFuture, TaskState
 from .pool import Pool
 from .provider import AutoscalePolicy
-from .telemetry import FOLDED, PARENT_ROOT, REQUEUE, WORKER_KILLED
+from .telemetry import (CHECKPOINT, FOLDED, PARENT_ROOT, REQUEUE,
+                        WORKER_KILLED)
 
 __all__ = ["WorkSpec", "IrregularResult", "run_irregular"]
 
@@ -98,6 +99,17 @@ class WorkSpec:
     encode_item: Optional[Callable[[Any], Any]] = None
     encode_result: Optional[Callable[[Any], Any]] = None
     decode_result: Optional[Callable[[Any], Any]] = None
+    #: WAL segment-checkpoint codecs (``checkpoint_every=``).  A
+    #: checkpoint journals the encoded accumulator plus the pending
+    #: multiset, so recovery replays only the journal tail past it —
+    #: ``encode_state``/``decode_state`` must round-trip the
+    #: accumulator exactly, and ``decode_item`` must invert
+    #: ``encode_item`` (unlike plain WAL replay, checkpointed pending
+    #: items are *reconstructed* from their encodings, not re-derived
+    #: from seed/split).
+    decode_item: Optional[Callable[[Any], Any]] = None
+    encode_state: Optional[Callable[[Any], Any]] = None
+    decode_state: Optional[Callable[[Any], Any]] = None
     #: default task shape (split_factor, iters) when none is passed
     shape: TaskShape = TaskShape(1, 1)
 
@@ -144,6 +156,16 @@ class IrregularResult:
     #: frontier items reconstructed from the WAL when the run was
     #: started with ``resume_from=`` (0 on a fresh run)
     recovered_tasks: int = 0
+    #: DAG runs only (``repro.dag.DagSpec``): longest dependency chain
+    #: executed (nodes on the critical path; 0 for tree workloads)
+    critical_path_len: int = 0
+    #: DAG runs only: executed nodes per dependency depth —
+    #: ``stage_widths[d]`` counts the nodes whose longest path from a
+    #: root has ``d`` edges (the irregular stage-width profile)
+    stage_widths: List[int] = field(default_factory=list)
+    #: DAG runs only: total nodes executed (static + dynamically
+    #: expanded)
+    dag_nodes: int = 0
 
     @property
     def throughput(self) -> float:
@@ -167,6 +189,13 @@ class _ChunkWal:
 
     size: int
     entries: List[dict] = field(default_factory=list)
+    #: children produced by already-folded slots, held back until the
+    #: chunk's atomic journal event lands: on wall pools a chunk's
+    #: slots settle across drain batches, and a child folded (and
+    #: journaled) before its parent chunk's event would leave a crash
+    #: window whose journal records a fold the replayed seed/split
+    #: never produced.  Entries are ``(children, parent_task_id)``.
+    deferred: List[Tuple[List[Any], int]] = field(default_factory=list)
 
 
 @dataclass
@@ -193,6 +222,7 @@ def run_irregular(
     shards: Optional[int] = None,
     resume_from: Optional[Any] = None,
     wal: Optional[bool] = None,
+    checkpoint_every: Optional[int] = None,
 ) -> IrregularResult:
     """Drive ``spec`` over ``pool`` to completion.
 
@@ -280,7 +310,48 @@ def run_irregular(
                           the trace spill a crash-recovery log.
                           Default: ``True`` iff ``resume_from`` is
                           given.
+    checkpoint_every      journal a ``checkpoint`` event (encoded
+                          accumulator + pending multiset) every N
+                          folds, at instants where no fused chunk is
+                          partially folded — recovery then replays only
+                          the journal tail past the last checkpoint
+                          instead of the whole journal.  Implies
+                          ``wal=True``; requires the spec's
+                          ``encode_state``/``decode_state``/
+                          ``decode_item`` codecs; single-master only
+                          (incompatible with ``shards>1`` and
+                          ``arrivals=``).
+
+    A spec exposing ``to_workspec()`` (e.g. ``repro.dag.DagSpec``) is
+    adapted first — dependency-structured workloads run through the
+    very same completion path.
     """
+    to_ws = getattr(spec, "to_workspec", None)
+    if to_ws is not None:
+        spec = to_ws()
+    if checkpoint_every is not None:
+        if checkpoint_every < 1:
+            raise ValueError(
+                f"{spec.name}: checkpoint_every must be >= 1")
+        if shards is not None and shards > 1:
+            raise ValueError(
+                f"{spec.name}: checkpoint_every= is single-master "
+                f"(incompatible with shards>1)")
+        if arrivals is not None:
+            raise ValueError(
+                f"{spec.name}: checkpoint_every= is incompatible with "
+                f"arrivals= (open-loop pending is not checkpointable)")
+        if wal is False:
+            raise ValueError(
+                f"{spec.name}: checkpoint_every= requires wal")
+        wal = True
+        missing = [n for n in ("encode_state", "decode_state",
+                               "decode_item")
+                   if getattr(spec, n, None) is None]
+        if missing:
+            raise ValueError(
+                f"{spec.name}: checkpoint_every= needs checkpoint "
+                f"codecs on the spec (missing {', '.join(missing)})")
     if shards is not None and shards > 1:
         if controller is not None:
             raise ValueError(
@@ -418,6 +489,7 @@ def run_irregular(
 
     deadline = None if timeout is None else t0 + timeout
     speculated = 0
+    folds_since = 0  # journaled folds since the last checkpoint
 
     def apply_autoscale() -> None:
         """Frontier-pressure grow / idle shrink, honoring the ramp."""
@@ -528,26 +600,58 @@ def run_irregular(
             d = outstanding.pop(f)
             result = f.result()
             state = spec.reduce(state, result)
+            if controller is not None:
+                shape = controller.update(len(outstanding))
+            # child waves to issue once WAL order allows: (kids, parent)
+            ready: List[Tuple[List[Any], int]] = []
             if wal_log is not None:
                 # WAL order: journal AFTER the fold applies and BEFORE
                 # any child dispatch — recovery replays exactly the
                 # folds that happened and re-derives everything else.
                 # Fused-batch slots accumulate into one atomic entry
-                # (see _ChunkWal)
+                # (see _ChunkWal), and their children are deferred with
+                # it: on wall pools a chunk's slots settle across drain
+                # batches, and a child folded before its parent chunk's
+                # event would leave a crash window whose journal
+                # records folds the replayed seed/split never produced.
                 entry = {"item": spec.encode_item(d.item),
                          "result": spec.encode_result(result)}
                 if d.chunk is None:
                     wal_log.emit(FOLDED, task_id=f._task.task_id,
                                  payload=entry)
+                    folds_since += 1
+                    ready.append((list(spec.split(result, shape)),
+                                  f._task.task_id))
                 else:
                     d.chunk.entries.append(entry)
+                    d.chunk.deferred.append(
+                        (list(spec.split(result, shape)),
+                         f._task.task_id))
                     if len(d.chunk.entries) == d.chunk.size:
                         wal_log.emit(FOLDED, task_id=f._task.task_id,
                                      payload={"batch": d.chunk.entries})
-            if controller is not None:
-                shape = controller.update(len(outstanding))
-            dispatch_ready(list(spec.split(result, shape)), shape,
-                           parent=f._task.task_id)
+                        folds_since += d.chunk.size
+                        ready.extend(d.chunk.deferred)
+            else:
+                ready.append((list(spec.split(result, shape)),
+                              f._task.task_id))
+            for kids, pid in ready:
+                dispatch_ready(kids, shape, parent=pid)
+            if (checkpoint_every is not None
+                    and folds_since >= checkpoint_every
+                    and not any(dd.chunk is not None and dd.chunk.entries
+                                for dd in outstanding.values())):
+                # a consistent cut: the accumulator holds exactly the
+                # journaled folds (no partially folded chunk is
+                # outstanding) and ``pending`` is the full multiset of
+                # known-but-unfolded items
+                wal_log.emit(
+                    CHECKPOINT,
+                    payload={
+                        "state": spec.encode_state(state),
+                        "pending": [spec.encode_item(dd.item)
+                                    for dd in outstanding.values()]})
+                folds_since = 0
             if observe_completion is not None:
                 # latency-targeting policies (SLO autoscale) consume
                 # each completion's queue delay — this is what lets a
@@ -592,6 +696,7 @@ def run_irregular(
         ev_counts = window.counts()
         retries = ev_counts.get(REQUEUE, 0)
         worker_deaths = ev_counts.get(WORKER_KILLED, 0)
+    dag = getattr(spec, "dag", None)
     return IrregularResult(
         output=spec.finalize(state),
         wall_time_s=wall,
@@ -610,6 +715,9 @@ def run_irregular(
         retries=retries,
         worker_deaths=worker_deaths,
         recovered_tasks=recovered,
+        critical_path_len=dag.critical_path_len if dag is not None else 0,
+        stage_widths=list(dag.stage_widths) if dag is not None else [],
+        dag_nodes=dag.executed if dag is not None else 0,
     )
 
 
@@ -717,6 +825,10 @@ def _run_sharded(
     inflight = [0] * K
     n_dispatched = 0
     steals = 0
+    # chaos hook (kill_master_after kill_on_steal=): die on the N-th
+    # successful steal instead of in fold order
+    kill_on_steal: Optional[int] = getattr(
+        spec.reduce, "_repro_kill_on_steal", None)
 
     seed_shape = initial_shape or shape
     if resume_from is not None:
@@ -850,6 +962,17 @@ def _run_sharded(
             if not frontiers[s] and inflight[s] < views[s].slots:
                 if _steal_half(frontiers, s) is not None:
                     steals += 1
+                    if kill_on_steal is not None and steals >= kill_on_steal:
+                        # chaos injection (kill_master_after
+                        # kill_on_steal=): die mid-steal, after the
+                        # transfer but before the stolen items
+                        # dispatch — steals move items between
+                        # in-memory frontiers only, so the WAL left
+                        # behind is exactly a real crash's
+                        from ..chaos.recovery import MasterKilledError
+                        raise MasterKilledError(
+                            f"{spec.name}: injected master kill on "
+                            f"steal #{steals}")
                     fill(s)
         if not owner:
             if any(frontiers):  # pragma: no cover — slots >= 1 always
@@ -891,6 +1014,7 @@ def _run_sharded(
         ev_counts = window.counts()
         retries = ev_counts.get(REQUEUE, 0)
         worker_deaths = ev_counts.get(WORKER_KILLED, 0)
+    dag = getattr(spec, "dag", None)
     merged = _tree_merge(list(states), spec.merge)
     if recovered_partial is not None:
         # the pre-crash journal joins as one extra shard accumulator
@@ -914,6 +1038,9 @@ def _run_sharded(
         retries=retries,
         worker_deaths=worker_deaths,
         recovered_tasks=recovered,
+        critical_path_len=dag.critical_path_len if dag is not None else 0,
+        stage_widths=list(dag.stage_widths) if dag is not None else [],
+        dag_nodes=dag.executed if dag is not None else 0,
     )
 
 

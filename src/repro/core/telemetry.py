@@ -27,6 +27,8 @@ Now there is a single source of truth:
       throttled       admission backed off (rate limit / storm)
       cancel          a pending task was cancelled (fail-fast siblings)
       folded          master journaled a folded result (WAL entry)
+      checkpoint      master journaled a WAL segment checkpoint
+                      (encoded accumulator + pending multiset)
 
   Derived views — :attr:`EventLog.records`,
   :meth:`EventLog.concurrency_series`, :meth:`EventLog.capacity_series`,
@@ -60,7 +62,7 @@ __all__ = [
     "Event", "EventLog", "EVENT_KINDS", "PARENT_ROOT",
     "SUBMIT", "COLD_START", "START", "REQUEUE", "COMPLETE",
     "CAPACITY_GROW", "CAPACITY_SHRINK",
-    "WORKER_KILLED", "THROTTLED", "CANCEL", "FOLDED",
+    "WORKER_KILLED", "THROTTLED", "CANCEL", "FOLDED", "CHECKPOINT",
 ]
 
 SUBMIT = "submit"
@@ -74,10 +76,11 @@ WORKER_KILLED = "worker_killed"
 THROTTLED = "throttled"
 CANCEL = "cancel"
 FOLDED = "folded"
+CHECKPOINT = "checkpoint"
 
 EVENT_KINDS = (SUBMIT, COLD_START, START, REQUEUE, COMPLETE,
                CAPACITY_GROW, CAPACITY_SHRINK,
-               WORKER_KILLED, THROTTLED, CANCEL, FOLDED)
+               WORKER_KILLED, THROTTLED, CANCEL, FOLDED, CHECKPOINT)
 
 #: ``Event.parent`` sentinel for an explicit root submit (no spawning
 #: completion).  ``parent=None`` means the recording predates parent

@@ -495,3 +495,164 @@ def test_hybrid_forwards_faults_to_subpools(uts_base):
         deaths = pool.stats.worker_deaths
     assert r.output == uts_base.output
     assert deaths > 0
+
+
+# -- WAL segment checkpointing (PR-10) -------------------------------------
+
+def test_checkpoint_requires_codecs_and_single_master():
+    spec = uts_spec(UTS_P)
+    bare = spec.__class__(**{**spec.__dict__, "decode_item": None,
+                             "encode_state": None, "decode_state": None})
+    pool = make_pool("sim", max_concurrency=4)
+    with pytest.raises(ValueError, match="checkpoint codecs"):
+        run_irregular(pool, bare, shape=UTS_SHAPE, checkpoint_every=5)
+    with pytest.raises(ValueError, match="single-master"):
+        run_irregular(pool, spec, shape=UTS_SHAPE, checkpoint_every=5,
+                      shards=2)
+    with pytest.raises(ValueError, match="requires wal"):
+        run_irregular(pool, spec, shape=UTS_SHAPE, checkpoint_every=5,
+                      wal=False)
+    with pytest.raises(ValueError, match=">= 1"):
+        run_irregular(pool, spec, shape=UTS_SHAPE, checkpoint_every=0)
+
+
+def test_checkpointed_output_unchanged(uts_base):
+    r, pool = _run(uts_spec(UTS_P), shape=UTS_SHAPE, wal=True,
+                   checkpoint_every=7)
+    assert r.output == uts_base.output
+    from repro.core.telemetry import CHECKPOINT
+    assert len(pool.events.events(CHECKPOINT)) > 0
+
+
+def test_checkpoint_kill_resume_replays_tail_only(uts_base):
+    pool = make_pool("sim", max_concurrency=16)
+    with pytest.raises(MasterKilledError):
+        run_irregular(pool, kill_master_after(uts_spec(UTS_P), 40),
+                      shape=UTS_SHAPE, checkpoint_every=5)
+    from repro.core.telemetry import CHECKPOINT, FOLDED
+    n_ckpt = len(pool.events.events(CHECKPOINT))
+    n_folds = sum(len(e.payload.get("batch", [e.payload]))
+                  for e in pool.events.events(FOLDED))
+    assert n_ckpt >= 2 and n_folds == 40
+    rec = recover_frontier(pool.events, uts_spec(UTS_P), shape=UTS_SHAPE)
+    assert rec.checkpointed
+    # tail-only: strictly fewer replayed folds than the journal holds
+    assert rec.folded < n_folds
+    resumed, _ = _run(uts_spec(UTS_P), shape=UTS_SHAPE,
+                      resume_from=pool.events)
+    assert resumed.output == uts_base.output
+
+
+def test_checkpoint_recovery_without_codecs_fails():
+    pool = make_pool("sim", max_concurrency=16)
+    with pytest.raises(MasterKilledError):
+        run_irregular(pool, kill_master_after(uts_spec(UTS_P), 40),
+                      shape=UTS_SHAPE, checkpoint_every=5)
+    spec = uts_spec(UTS_P)
+    bare = spec.__class__(**{**spec.__dict__, "decode_item": None,
+                             "decode_state": None})
+    with pytest.raises(ValueError, match="checkpoint"):
+        recover_frontier(pool.events, bare, shape=UTS_SHAPE)
+
+
+def test_hundred_thousand_event_journal_recovers_from_tail():
+    """A 10^5-event journal with a late checkpoint must recover in
+    O(tail): the replay touches only folds past the checkpoint."""
+    from repro.core.telemetry import CHECKPOINT, EventLog, VirtualClock
+    N, TAIL, UNFOLDED = 100_000, 1_000, 100
+    calls = {"reduce": 0, "decode": 0}
+
+    def counting_spec():
+        def reduce(s, r):
+            calls["reduce"] += 1
+            return s + r
+
+        def decode(e):
+            calls["decode"] += 1
+            return e
+
+        return WorkSpec(
+            name="sumN", execute=lambda it, sh: it,
+            seed=lambda sh: range(N), reduce=reduce, init=lambda: 0,
+            encode_item=lambda it: it, encode_result=lambda r: r,
+            decode_result=decode, decode_item=lambda e: e,
+            encode_state=lambda s: s, decode_state=lambda e: e)
+
+    log = EventLog(clock=VirtualClock())
+    head = N - TAIL
+    for i in range(head):
+        log.emit(FOLDED, payload={"item": i, "result": i})
+    log.emit(CHECKPOINT, payload={"state": sum(range(head)),
+                                  "pending": list(range(head, N))})
+    for i in range(head, N - UNFOLDED):
+        log.emit(FOLDED, payload={"item": i, "result": i})
+    assert len(log) >= 99_000
+    rec = recover_frontier(log, counting_spec(), shape=TaskShape(1, 1))
+    assert rec.checkpointed
+    assert rec.folded == TAIL - UNFOLDED
+    assert calls["reduce"] == TAIL - UNFOLDED       # tail only
+    assert calls["decode"] == TAIL - UNFOLDED
+    assert rec.pending == list(range(N - UNFOLDED, N))
+    assert rec.partial == sum(range(N - UNFOLDED))
+
+
+# -- sharded mid-steal master crash (PR-10) --------------------------------
+
+def test_kill_on_steal_fires_and_resumes_bit_identical(uts_base):
+    pool = make_pool("sim", max_concurrency=16)
+    with pytest.raises(MasterKilledError, match="steal"):
+        run_irregular(pool,
+                      kill_master_after(uts_spec(UTS_P), 10**9,
+                                        kill_on_steal=2),
+                      shape=UTS_SHAPE, shards=4, wal=True)
+    resumed, _ = _run(uts_spec(UTS_P), shape=UTS_SHAPE, shards=4,
+                      resume_from=pool.events)
+    assert resumed.output == uts_base.output
+    assert resumed.recovered_tasks > 0
+
+
+def test_kill_on_steal_ignored_by_single_master(uts_base):
+    # the hook only arms the sharded steal path; shards=1 never steals
+    r, _ = _run(kill_master_after(uts_spec(UTS_P), 10**9,
+                                  kill_on_steal=1),
+                shape=UTS_SHAPE, wal=True)
+    assert r.output == uts_base.output
+
+
+# -- wall-pool chunk-atomic journaling (PR-10) -----------------------------
+
+def test_local_batched_wal_every_prefix_recoverable(uts_base):
+    """On thread pools a chunk's slots settle across drain batches; a
+    child journaled before its parent chunk's atomic event used to
+    leave crash windows whose journal folds items the replayed
+    seed/split never produced.  With chunk-children deferral, EVERY
+    folded-event prefix is a consistent recovery point."""
+    pool = make_pool("local", max_concurrency=4)
+    try:
+        r = run_irregular(pool, uts_spec(UTS_P), shape=UTS_SHAPE,
+                          batching=True, wal=True)
+        events = pool.events.events()
+    finally:
+        pool.shutdown()
+    assert r.output == uts_base.output
+    checked = 0
+    for i, ev in enumerate(events):
+        if ev.kind != FOLDED:
+            continue
+        checked += 1
+        rec = recover_frontier(events[:i + 1], uts_spec(UTS_P),
+                               shape=UTS_SHAPE)  # must not raise
+        assert rec.folded >= 1
+    assert checked >= 2
+
+
+def test_sim_batched_checkpoint_defers_past_partial_chunks(uts_base):
+    # batching + checkpointing compose: checkpoints only land at cuts
+    # with no partially-folded chunk, and resume stays bit-identical
+    pool = make_pool("sim", max_concurrency=16)
+    with pytest.raises(MasterKilledError):
+        run_irregular(pool, kill_master_after(uts_spec(UTS_P), 30),
+                      shape=UTS_SHAPE, batching=True, checkpoint_every=4)
+    resumed, _ = _run(uts_spec(UTS_P), shape=UTS_SHAPE, batching=True,
+                      resume_from=pool.events)
+    assert resumed.output == uts_base.output

@@ -1,0 +1,218 @@
+"""repro.dag: dependency-structured workloads + the parallelism probe."""
+import dataclasses
+
+import pytest
+
+from repro.chaos import MasterKilledError, kill_master_after
+from repro.core import make_pool, run_irregular
+from repro.core.provider import ProviderModel
+from repro.dag import (DagBuilder, DagNode, DagSpec, ParallelismProfile,
+                       hyperparam_sweep_dag, iterative_mapreduce_dag,
+                       montage_dag, probe_widths, run_parallelism_probe)
+
+FAMILIES = [montage_dag, hyperparam_sweep_dag, iterative_mapreduce_dag]
+
+
+def _sim():
+    return make_pool("sim", max_concurrency=8)
+
+
+# -- validation paths ------------------------------------------------------
+
+def test_duplicate_node_id_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        DagSpec(name="dup", nodes=(
+            DagNode("a", lambda i, p: 0),
+            DagNode("a", lambda i, p: 1)))
+
+
+def test_unknown_dep_is_unreachable():
+    with pytest.raises(ValueError, match="unreachable"):
+        DagSpec(name="orphan", nodes=(
+            DagNode("a", lambda i, p: 0),
+            DagNode("b", lambda i, p: 0, deps=("ghost",))))
+
+
+def test_cycle_detected():
+    with pytest.raises(ValueError, match="cycle"):
+        DagSpec(name="loop", nodes=(
+            DagNode("a", lambda i, p: 0, deps=("c",)),
+            DagNode("b", lambda i, p: 0, deps=("a",)),
+            DagNode("c", lambda i, p: 0, deps=("b",))))
+
+
+def test_unknown_output_rejected():
+    with pytest.raises(ValueError, match="outputs"):
+        DagSpec(name="out", nodes=(DagNode("a", lambda i, p: 0),),
+                outputs=("ghost",))
+
+
+def test_dynamic_expand_validation():
+    def expand(v):
+        return [DagNode("root", lambda i, p: 0)]  # collides with root
+    spec = DagSpec(name="dyn", nodes=(
+        DagNode("root", lambda i, p: 0, expand=expand),))
+    with pytest.raises(ValueError, match="duplicate"):
+        run_irregular(_sim(), spec)
+
+
+# -- deterministic gather --------------------------------------------------
+
+def test_join_gathers_in_declared_dep_order():
+    b = DagBuilder("gather")
+    ids = b.fan_out("leaf", lambda i, p: p * 10, range(5))
+    b.join("sink", lambda i, p: list(i), list(reversed(ids)))
+    out = run_irregular(_sim(), b.build()).output
+    # inputs arrive in *declared* order (reversed here), regardless of
+    # the order the leaves completed in
+    assert out == {"sink": [40, 30, 20, 10, 0]}
+
+
+# -- bit-identity across pools and batching --------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES,
+                         ids=[f.__name__ for f in FAMILIES])
+def test_bit_identical_across_pools_and_batching(family):
+    base = run_irregular(_sim(), family())
+    assert base.output  # non-trivial sink map
+    for mk_pool in (_sim, lambda: make_pool("local", max_concurrency=4)):
+        for batching in (False, True):
+            pool = mk_pool()
+            try:
+                r = run_irregular(pool, family(), batching=batching)
+            finally:
+                if hasattr(pool, "shutdown"):
+                    pool.shutdown()
+            assert r.output == base.output, (mk_pool, batching)
+            assert r.dag_nodes == base.dag_nodes
+            assert r.stage_widths == base.stage_widths
+            assert r.critical_path_len == base.critical_path_len
+
+
+@pytest.mark.parametrize("family", FAMILIES,
+                         ids=[f.__name__ for f in FAMILIES])
+def test_bit_identical_sharded(family):
+    base = run_irregular(_sim(), family())
+    r = run_irregular(_sim(), family(), shards=3)
+    assert r.output == base.output
+    assert r.shards == 3
+
+
+# -- DAG result surface ----------------------------------------------------
+
+def test_montage_static_shape():
+    r = run_irregular(_sim(), montage_dag(tiles=8))
+    # 8 projections + 1 background at depth 0, then 4/2/1 reduce
+    # levels, then the final join
+    assert r.stage_widths == [9, 4, 2, 1, 1]
+    assert r.critical_path_len == 5
+    assert r.dag_nodes == 17
+    assert r.tasks == 17
+    assert list(r.output) == ["mosaic"]
+
+
+def test_dynamic_widths_are_data_dependent():
+    r = run_irregular(_sim(), iterative_mapreduce_dag(
+        rounds=4, initial_width=8, max_width=16))
+    # map widths alternate with the 1-wide reduce barriers
+    assert len(r.stage_widths) == 8
+    assert r.stage_widths[0] == 8
+    assert all(w == 1 for w in r.stage_widths[1::2])
+    # at least one round picked a width != the initial one
+    assert any(w != 8 for w in r.stage_widths[2::2])
+
+
+def test_sweep_early_stopping_shrinks_stages():
+    r = run_irregular(_sim(), hyperparam_sweep_dag(configs=8, stages=3))
+    train_widths = r.stage_widths[::2]
+    assert train_widths[0] == 8
+    assert all(b <= a for a, b in zip(train_widths, train_widths[1:]))
+    assert train_widths[-1] < 8  # someone was early-stopped
+
+
+def test_tree_specs_report_no_dag_fields():
+    from repro.algorithms.uts import UTSParams, uts_spec
+    from repro.core import TaskShape
+    r = run_irregular(_sim(), uts_spec(UTSParams(seed=2, b0=3.0,
+                                                 max_depth=4)),
+                      shape=TaskShape(split_factor=4, iters=50))
+    assert r.critical_path_len == 0
+    assert r.stage_widths == []
+    assert r.dag_nodes == 0
+
+
+# -- WAL kill + resume mid-DAG ---------------------------------------------
+
+@pytest.mark.parametrize("family,n_folds",
+                         [(montage_dag, 9),
+                          (hyperparam_sweep_dag, 6),
+                          (iterative_mapreduce_dag, 12)],
+                         ids=[f.__name__ for f in FAMILIES])
+def test_mid_dag_kill_resume_bit_identical(family, n_folds):
+    base = run_irregular(_sim(), family()).output
+    pool = _sim()
+    with pytest.raises(MasterKilledError):
+        # kill_master_after wraps the *adapted* spec (DagSpec itself
+        # has no reduce field to replace)
+        run_irregular(pool, kill_master_after(family().to_workspec(),
+                                              n_folds), wal=True)
+    resumed = run_irregular(_sim(), family(), resume_from=pool.events)
+    assert resumed.output == base
+    assert resumed.recovered_tasks > 0
+
+
+def test_mid_dag_kill_resume_batched():
+    base = run_irregular(_sim(), montage_dag()).output
+    pool = _sim()
+    with pytest.raises(MasterKilledError):
+        run_irregular(pool, kill_master_after(
+            montage_dag().to_workspec(), 9), wal=True, batching=True)
+    resumed = run_irregular(_sim(), montage_dag(),
+                            resume_from=pool.events, batching=True)
+    assert resumed.output == base
+
+
+# -- the Barcelona-Pons probe ----------------------------------------------
+
+def test_probe_widths_schedule():
+    assert probe_widths(16) == [1, 2, 4, 8, 16]
+    assert probe_widths(20, start=4) == [4, 8, 16, 20]
+    with pytest.raises(ValueError):
+        probe_widths(0)
+
+
+def test_probe_measures_platform_limits():
+    provider = ProviderModel.gcf()   # burst 100
+    pool = make_pool("sim", max_concurrency=1024, provider=provider)
+    prof = run_parallelism_probe(pool, max_width=256)
+    assert isinstance(prof, ParallelismProfile)
+    assert prof.requested == [1, 2, 4, 8, 16, 32, 64, 128, 256]
+    assert prof.envelope_monotone()
+    by_width = dict(zip(prof.requested, prof.achieved))
+    assert by_width[64] == 64            # under the burst: delivered
+    assert by_width[256] < 256           # over it: platform-limited
+    assert prof.bursts[0].cold_start_share > 0
+    assert prof.bursts[-1].ramp_latency_s >= 0
+
+
+def test_probe_feeds_fit_provider():
+    known = dataclasses.replace(
+        ProviderModel.gcf(), name="probe-target", burst_concurrency=8,
+        scaling_ramp_per_min=240.0, cold_start_s=0.3)
+    pool = make_pool("sim", max_concurrency=1024, provider=known)
+    # constant-width bursts: the delivered envelope climbs the ramp,
+    # which is exactly the signal the calibration line-fit needs
+    prof = run_parallelism_probe(pool, max_width=256, start=256,
+                                 repeats_at_max=10)
+    fitted = prof.fit(base=known)
+    assert isinstance(fitted, ProviderModel)
+    assert abs(fitted.burst_concurrency - 8) <= 2
+    assert abs(fitted.scaling_ramp_per_min - 240.0) / 240.0 < 0.25
+    assert abs(fitted.cold_start_s - 0.3) / 0.3 < 0.25
+
+
+def test_probe_on_prewarmed_delivers_everything():
+    pool = make_pool("sim", max_concurrency=1024,
+                     provider=ProviderModel.prewarmed())
+    prof = run_parallelism_probe(pool, max_width=128)
+    assert prof.achieved == prof.requested
